@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: fused FrODO update (Pallas, interpret on CPU)
+vs the unfused pure-jnp reference, plus the analytic HBM-traffic model that
+motivates the fusion on TPU (the wall-clock here is CPU interpret-mode and
+NOT indicative of TPU perf; the derived column is the modelled HBM bytes
+moved per step, which is hardware-independent)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import memory as fmem
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=2):
+    fn(*args)                                    # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def traffic_model(n, T=None, K=None, itemsize=4):
+    """HBM bytes per step: fused = single pass; unfused = extra M write+read."""
+    if T is not None:
+        fused = (T + 3) * n * itemsize           # hist + g + x rw
+        unfused = (T + 5) * n * itemsize         # + materialize M
+    else:
+        fused = (2 * K + 3) * n * itemsize
+        unfused = (2 * K + 5) * n * itemsize
+    return fused, unfused
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    for n in (1 << 14, 1 << 17):
+        T, K = 32, 8
+        g = jnp.asarray(rng.normal(size=n), jnp.float32)
+        hist = jnp.asarray(rng.normal(size=(T, n)), jnp.float32)
+        w = jnp.asarray(fmem.mu_weights(T, 0.15), jnp.float32)
+        cur = jnp.int32(3)
+        jr = jax.jit(lambda g, h: ref.frodo_update_ref(g, h, cur, w, 0.8,
+                                                       0.35))
+        us_ref = _time(jr, g, hist)
+        us_ker = _time(lambda g, h: ops.frodo_update(g, h, cur, w, 0.8,
+                                                     0.35), g, hist)
+        fused, unfused = traffic_model(n, T=T)
+        out.append((f"frodo_exact_jnp_n{n}", us_ref, f"hbm_bytes={unfused}"))
+        out.append((f"frodo_exact_pallas_n{n}(interp)", us_ker,
+                    f"hbm_bytes={fused}"))
+        acc = jnp.asarray(rng.normal(size=(K, n)), jnp.float32)
+        rates, coeffs = fmem.fit_expsum(90, 0.15, K)
+        rates = jnp.asarray(rates, jnp.float32)
+        coeffs = jnp.asarray(coeffs, jnp.float32)
+        jr2 = jax.jit(lambda g, a: ref.frodo_expsum_update_ref(
+            g, a, rates, coeffs, 0.8, 0.35))
+        us_ref2 = _time(jr2, g, acc)
+        us_ker2 = _time(lambda g, a: ops.frodo_expsum_update(
+            g, a, rates, coeffs, 0.8, 0.35), g, acc)
+        fused, unfused = traffic_model(n, K=K)
+        out.append((f"frodo_expsum_jnp_n{n}", us_ref2,
+                    f"hbm_bytes={unfused}"))
+        out.append((f"frodo_expsum_pallas_n{n}(interp)", us_ker2,
+                    f"hbm_bytes={fused}"))
+    return out

@@ -1,0 +1,128 @@
+"""Benchmark harness — one entry per paper table/figure + framework extras.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  exp1      -> paper Fig. 1 (left): ill-conditioned quadratic, 3 variants
+  exp2      -> paper Fig. 1 (right): federated ANN, 5 optimizers
+  kernels   -> fused FrODO update kernels vs unfused jnp reference
+  consensus -> per-step consensus cost for the mixing strategies
+  roofline  -> summarizes experiments/dryrun into roofline rows
+
+Full-protocol runs: ``python benchmarks/exp1_quadratic.py`` (100 sets) and
+``python benchmarks/exp2_federated.py`` (5 seeds, 300 steps); this harness
+uses reduced sizes so the whole suite stays CPU-friendly.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_exp1():
+    from benchmarks.exp1_quadratic import run_experiment
+    t0 = time.perf_counter()
+    s = run_experiment(n_sets=25, n_circle=25, out=None)
+    us = (time.perf_counter() - t0) * 1e6
+    frac = s["fractional"]["circle_mean"]
+    hb = s["heavy_ball"]["circle_mean"]
+    nm = s["no_memory"]["circle_mean"]
+    _row("exp1_fractional_iters", us / 3, f"mean={frac:.0f}")
+    _row("exp1_heavy_ball_iters", us / 3, f"mean={hb:.0f}")
+    _row("exp1_no_memory_iters", us / 3, f"mean={nm:.0f}")
+    _row("exp1_speedup_vs_heavy_ball", 0.0, f"{hb / max(frac, 1):.2f}x")
+    _row("exp1_speedup_vs_no_memory", 0.0, f"{nm / max(frac, 1):.2f}x")
+    p = s["ks_tests"]["one_sided_fractional<no_memory"]["p"]
+    _row("exp1_ks_frac_beats_no_memory", 0.0, f"p={p:.2e}")
+
+
+def bench_exp2():
+    from benchmarks.exp2_federated import run_experiment
+    t0 = time.perf_counter()
+    s = run_experiment(steps=200, n_seeds=2, out=None)
+    us = (time.perf_counter() - t0) * 1e6
+    for m in ("frodo", "gd", "nesterov", "heavy_ball", "adam"):
+        steps = s[m]["steps_to_gd_final"][0]
+        _row(f"exp2_{m}_steps_to_target", us / 5,
+             f"steps={steps:.0f},final_acc={s[m]['final_acc_mean']:.3f}")
+    _row("exp2_speedup_vs_gd", 0.0, f"{s['speedup_vs_gd']:.2f}x")
+    _row("exp2_speedup_vs_heavy_ball", 0.0,
+         f"{s['speedup_vs_heavy_ball']:.2f}x")
+
+
+def bench_kernels():
+    from benchmarks.kernel_bench import rows
+    for name, us, derived in rows():
+        _row(name, us, derived)
+
+
+def bench_consensus():
+    from repro.core import consensus as C, graph as G
+    rng = np.random.default_rng(0)
+    for A in (8, 32):
+        x = {"p": jnp.asarray(rng.normal(size=(A, 1 << 16)), jnp.float32)}
+        for name, W in (
+                ("uniform_complete", np.full((A, A), 1.0 / A)),
+                ("xiao_boyd_ring", G.xiao_boyd_weights(
+                    G.ring(A, directed=False))),
+        ):
+            fn = jax.jit(lambda x, W=W: C.mix_stacked(x, W))
+            fn(x)
+            t0 = time.perf_counter()
+            for _ in range(10):
+                out = fn(x)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / 10 * 1e6
+            # per-device comm model: pmean O(n) vs gather O(A n)
+            n_bytes = x["p"].size * 4
+            comm = n_bytes * (2 if name.startswith("uniform") else 4)
+            _row(f"consensus_{name}_A{A}", us, f"model_bytes={comm}")
+
+
+def bench_ablations():
+    from benchmarks.ablations import expsum_K
+    rows = expsum_K()
+    exact = rows.pop("exact_T90")
+    _row("ablation_exact_T90_iters", 0.0, f"iters={exact}")
+    for k, v in rows.items():
+        _row(f"ablation_expsum_{k}", 0.0,
+             f"iters={v['iters']},fit={v['fit_rel_l2']:.1e}")
+
+
+def bench_roofline():
+    import os
+    if not os.path.isdir("experiments/dryrun"):
+        _row("roofline", 0.0, "no dryrun artifacts; run repro.launch.dryrun")
+        return
+    from benchmarks.roofline import load_records, roofline_terms
+    recs = load_records("experiments/dryrun")
+    ok = 0
+    for r in recs:
+        t = roofline_terms(r)
+        if not t:
+            continue
+        ok += 1
+        _row(f"roofline_{t['arch']}_{t['shape']}_{t['mesh']}",
+             t["step_time_bound_s"] * 1e6,
+             f"dom={t['dominant']},mfu_bound={t['mfu_bound']:.2f}")
+    _row("roofline_pairs_analyzed", 0.0, f"count={ok}")
+
+
+def main() -> None:
+    which = sys.argv[1:] or ["kernels", "consensus", "exp1", "exp2",
+                             "ablations", "roofline"]
+    print("name,us_per_call,derived")
+    for w in which:
+        {"exp1": bench_exp1, "exp2": bench_exp2, "kernels": bench_kernels,
+         "consensus": bench_consensus, "roofline": bench_roofline,
+         "ablations": bench_ablations}[w]()
+
+
+if __name__ == "__main__":
+    main()

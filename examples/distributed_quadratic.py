@@ -1,0 +1,48 @@
+"""Paper pedagogy (Experiment 1, reduced): four agents minimize the
+ill-conditioned quadratic with FrODO vs Heavy Ball vs No Memory, printing
+iterations-to-convergence per start — the Fig. 1 (left) story in 30 lines.
+
+    PYTHONPATH=src python examples/distributed_quadratic.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G, loop
+from repro.core.baselines import no_memory
+from repro.core.frodo import FrodoConfig, frodo
+
+
+def objective(x, i):
+    x1, x2 = x[0], x[1]
+    fs = jnp.stack([0.5 * (2 - x1) ** 2 + 0.005 * x2 ** 2,
+                    0.5 * (2 + x1) ** 2 + 0.005 * x2 ** 2,
+                    0.5 * x1 ** 2 + 0.005 * (2 - x2) ** 2,
+                    0.5 * x1 ** 2 + 0.005 * (2 + x2) ** 2])
+    return fs[i]
+
+
+def main():
+    W = G.xiao_boyd_weights(G.complete(4))
+    variants = {
+        "fractional (T=90)": frodo(FrodoConfig(alpha=0.8, beta=0.4,
+                                               lam=0.15, T=90)),
+        "heavy ball (T=1)": frodo(FrodoConfig(alpha=0.8, beta=0.4,
+                                              lam=0.5, T=1)),
+        "no memory (b=0)": no_memory(0.8),
+    }
+    starts = {"steepest (1,0)": (1.0, 0.0), "flattest (0,1)": (0.0, 1.0)}
+    print(f"{'variant':20s} " + " ".join(f"{s:>16s}" for s in starts))
+    for name, opt in variants.items():
+        cells = []
+        for st in starts.values():
+            x0 = jnp.tile(jnp.asarray(st), (4, 1))
+            out = loop.run(objective, x0, opt, W, 4000,
+                           x_star=jnp.zeros(2))
+            cells.append(loop.iterations_to_tol(out["errors"], 1e-6))
+        print(f"{name:20s} " + " ".join(f"{c:16d}" for c in cells))
+    print("\n(fractional memory keeps the flat direction moving: the paper's"
+          "\n ill-conditioned-Hessian claim, reproduced)")
+
+
+if __name__ == "__main__":
+    main()

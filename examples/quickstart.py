@@ -1,0 +1,41 @@
+"""Quickstart: federated training of a small LM with FrODO on CPU.
+
+Four agents, non-IID synthetic token streams, fractional-order memory with
+the exact (paper) representation, complete-graph consensus with Xiao-Boyd
+weights — the whole Algorithm 1 pipeline through the production trainer.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 30]
+"""
+import argparse
+
+from repro.configs import registry as REG
+from repro.data.synthetic import TokenPipeline
+from repro.training.trainer import Trainer
+from repro.training.train_step import TrainConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--agents", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = REG.get_smoke_config("h2o-danube-1.8b")
+    tc = TrainConfig(optimizer="frodo", alpha=0.02, beta=0.008, lam=0.15,
+                     T=40, memory_mode="exact", remat=False,
+                     topology="complete", weights="xiao_boyd")
+    trainer = Trainer(cfg, tc, n_agents=args.agents, log_every=5,
+                      metrics_file="experiments/quickstart_metrics.json")
+    state = trainer.init(seed=0)
+    data = iter(TokenPipeline(vocab=cfg.vocab, seq_len=128,
+                              batch_per_agent=4, n_agents=args.agents))
+    state = trainer.run(state, data, args.steps)
+    first = trainer.history[0]["loss"]
+    last = trainer.history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({args.agents} agents, FrODO exact T=40)")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Architecture registry + per-arch input specs (ShapeDtypeStruct stand-ins).
+
+``input_specs(cfg, shape, n_agents)`` returns the exact abstract inputs each
+step function is lowered against — no device allocation.  Training inputs
+carry a leading agent dim; decode inputs are unstacked (serving has no
+agents).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "qwen3-32b": "qwen3_32b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "minicpm3-4b": "minicpm3_4b",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-780m": "mamba2_780m",
+    "nemotron-4-15b": "nemotron_4_15b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.smoke_config()
+
+
+# ------------------------------------------------------------ shape skips
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not).  See DESIGN.md §shape-skips."""
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return False, ("enc-dec ASR decoder has a ~448-token context; "
+                       "a 500k decoder cache is meaningless for the family")
+    return True, ""
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    """Window override for decode shapes: full-attention archs serve
+    long_500k through the sliding-window variant (DESIGN.md)."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.family in ("ssm", "hybrid"):
+        return None                         # native sub-quadratic
+    if cfg.window > 0:
+        return None                         # native SWA (h2o-danube)
+    return cfg.long_context_window
+
+
+def reduced_layers(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same family/body with the scanned layer count set so the dominant
+    scan has trip count k (used by the dry-run's affine cost probes)."""
+    if cfg.family == "hybrid":
+        period = len(cfg.hybrid.pattern)
+        tail = cfg.n_layers % period
+        return cfg.replace(n_layers=period * k + tail)
+    if cfg.family == "moe" and cfg.moe and cfg.moe.n_dense_layers:
+        return cfg.replace(n_layers=cfg.moe.n_dense_layers + k)
+    if cfg.family == "audio":
+        return cfg.replace(n_layers=k, n_enc_layers=k)
+    return cfg.replace(n_layers=k)
+
+
+def scan_trip_count(cfg: ModelConfig) -> int:
+    """Trip count of the dominant layer scan."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.hybrid.pattern)
+    if cfg.family == "moe" and cfg.moe and cfg.moe.n_dense_layers:
+        return cfg.n_layers - cfg.moe.n_dense_layers
+    return cfg.n_layers
+
+
+# ------------------------------------------------------------ input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                n_agents: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for train/prefill (agent-stacked) or decode."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        assert B % n_agents == 0, (B, n_agents)
+        Ba = B // n_agents
+        specs = {"tokens": _sds((n_agents, Ba, S), jnp.int32),
+                 "labels": _sds((n_agents, Ba, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["img_embeds"] = _sds(
+                (n_agents, Ba, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+            specs["img_pos"] = _sds((n_agents, Ba, cfg.n_img_tokens), jnp.int32)
+        if cfg.family == "audio":
+            specs["frames"] = _sds(
+                (n_agents, Ba, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model),
+                                       jnp.bfloat16)
+            specs["img_pos"] = _sds((B, cfg.n_img_tokens), jnp.int32)
+        if cfg.family == "audio":
+            specs["frames"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                   jnp.bfloat16)
+        return specs
+    # decode: one token + position (cache is threaded separately)
+    return {"tokens": _sds((B, 1), jnp.int32)}

@@ -1,0 +1,9 @@
+"""FrODO core: the paper's contribution as a composable JAX module."""
+from repro.core.frodo import FrodoConfig, Optimizer, frodo, apply_updates
+from repro.core.baselines import (no_memory, heavy_ball, nesterov, adam,
+                                  REGISTRY as OPTIMIZERS)
+from repro.core import memory, graph, consensus, theory, loop
+
+__all__ = ["FrodoConfig", "Optimizer", "frodo", "apply_updates", "no_memory",
+           "heavy_ball", "nesterov", "adam", "OPTIMIZERS", "memory", "graph",
+           "consensus", "theory", "loop"]

@@ -1,0 +1,82 @@
+"""Baseline optimizers from the paper's Experiment 2, in the same API.
+
+The paper implements every baseline "as variations of Algorithm 1 by
+modifying the stage 2 descent terms"; we do exactly that:
+
+* ``no_memory``   — beta = 0 (plain distributed GD), Exp-1 "No Memory".
+* ``heavy_ball``  — FrODO with T = 1 (memory = previous gradient only),
+                    Exp-1/2 "Heavy Ball".
+* ``nesterov``    — classical Nesterov momentum on the stage-2 step.
+* ``adam``        — Adam on the stage-2 step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frodo import FrodoConfig, Optimizer, frodo
+
+
+def no_memory(alpha: float) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        delta = jax.tree.map(lambda g: -alpha * g, grads)
+        return delta, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def heavy_ball(alpha: float, beta: float) -> Optimizer:
+    """FrODO degenerates to the heavy-ball-style scheme at T=1: the memory
+    term is exactly the previous gradient (mu(1)=1 regardless of lambda)."""
+    return frodo(FrodoConfig(alpha=alpha, beta=beta, lam=0.5, T=1,
+                             memory_mode="exact"))
+
+
+def nesterov(alpha: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+        delta = jax.tree.map(lambda m, g: -alpha * (momentum * m + g),
+                             mom, grads)
+        return delta, {"step": state["step"] + 1, "mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adam(alpha: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z,
+                "v": jax.tree.map(jnp.zeros_like, z)}
+
+    def update(grads, state, params=None):
+        t = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ +
+                         (1 - b2) * jnp.square(g.astype(v_.dtype)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        delta = jax.tree.map(
+            lambda m_, v_: -alpha * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+            m, v)
+        return delta, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+REGISTRY = {
+    "frodo": lambda **kw: frodo(FrodoConfig(**kw)),
+    "no_memory": no_memory,
+    "heavy_ball": heavy_ball,
+    "nesterov": nesterov,
+    "adam": adam,
+}

@@ -1,0 +1,146 @@
+"""FrODO optimizer (Algorithm 1, stage 1+2) as an optax-style transform.
+
+The consensus stage (stage 3) is deliberately factored out into
+``core.consensus`` — in the distributed trainer it is a collective over the
+agent mesh axes, not part of the per-agent optimizer.  This file implements
+the per-agent update
+
+    g_i   = grad f_i(x_i)
+    M_i   = sum_{n=1..T} mu(n; lambda) g_i^(k-n)
+    x_i  <- x_i - alpha g_i - beta M_i
+
+with two memory representations (exact circular buffer / exponential-sum
+accumulators, see core.memory) and an optional fused Pallas kernel path for
+the update arithmetic (kernels/frodo_update.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import memory as fmem
+
+Params = Any
+Grads = Any
+State = Any
+
+
+class Optimizer(NamedTuple):
+    """Optax-style pair.  ``update`` returns (delta, new_state); the caller
+    applies ``params = params + delta``."""
+    init: Callable[[Params], State]
+    update: Callable[[Grads, State, Optional[Params]], tuple[Any, State]]
+
+
+@dataclasses.dataclass(frozen=True)
+class FrodoConfig:
+    alpha: float = 0.8          # gradient term magnitude
+    beta: float = 0.35          # memory feedback magnitude
+    lam: float = 0.15           # fractional order exponent, in (0,1)
+    T: int = 90                 # memory length
+    memory_mode: str = "exact"  # "exact" (paper) | "expsum" (beyond-paper)
+    K: int = 8                  # number of exponentials for expsum mode
+    exponent_scale: float = 1.0
+    use_kernel: bool = False    # route update arithmetic through Pallas ops
+    acc_dtype: str = "float32"  # expsum accumulator dtype (bf16 halves state)
+    pad_T: int = 0              # buffer size override (weights zero beyond T)
+
+    def __post_init__(self):
+        if self.memory_mode not in ("exact", "expsum"):
+            raise ValueError(f"bad memory_mode {self.memory_mode!r}")
+        if not (0.0 < self.lam < 1.0):
+            raise ValueError("lambda must be in (0,1) per Algorithm 1")
+
+
+def frodo(cfg: FrodoConfig) -> Optimizer:
+    if cfg.memory_mode == "exact":
+        return _frodo_exact(cfg)
+    return _frodo_expsum(cfg)
+
+
+# ------------------------------------------------------------------ exact
+
+def _frodo_exact(cfg: FrodoConfig) -> Optimizer:
+    T_buf = max(cfg.pad_T, cfg.T)
+    w = np.zeros(T_buf)
+    w[:cfg.T] = fmem.mu_weights(cfg.T, cfg.lam, cfg.exponent_scale)
+    weights = jnp.asarray(w, dtype=jnp.float32)
+
+    def init(params: Params) -> State:
+        hist = jax.tree.map(lambda p: fmem.exact_init(p, T_buf), params)
+        return {"step": jnp.zeros((), jnp.int32), "hist": hist}
+
+    def update(grads: Grads, state: State, params: Optional[Params] = None):
+        cursor = jnp.mod(state["step"], T_buf)
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+            def leaf(g, h):
+                newx_delta, newh = kops.frodo_update(
+                    g, h, cursor, weights, cfg.alpha, cfg.beta)
+                return newx_delta, newh
+        else:
+            def leaf(g, h):
+                M = fmem.exact_memory_term(h, cursor, weights)
+                delta = -(cfg.alpha * g + cfg.beta * M.astype(g.dtype))
+                return delta, fmem.exact_push(h, cursor, g)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_h = treedef.flatten_up_to(state["hist"])
+        out = [leaf(g, h) for g, h in zip(flat_g, flat_h)]
+        delta = treedef.unflatten([o[0] for o in out])
+        hist = treedef.unflatten([o[1] for o in out])
+        return delta, {"step": state["step"] + 1, "hist": hist}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- expsum
+
+def _frodo_expsum(cfg: FrodoConfig) -> Optimizer:
+    rates_np, coeffs_np = fmem.fit_expsum(cfg.T, cfg.lam, cfg.K,
+                                          cfg.exponent_scale)
+    rates = jnp.asarray(rates_np, jnp.float32)
+    coeffs = jnp.asarray(coeffs_np, jnp.float32)
+
+    def init(params: Params) -> State:
+        adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.acc_dtype]
+        acc = jax.tree.map(
+            lambda p: fmem.expsum_init(p, cfg.K).astype(adt), params)
+        return {"step": jnp.zeros((), jnp.int32), "acc": acc}
+
+    def update(grads: Grads, state: State, params: Optional[Params] = None):
+        if cfg.use_kernel:
+            from repro.kernels import ops as kops
+            def leaf(g, a):
+                return kops.frodo_expsum_update(
+                    g, a, rates, coeffs, cfg.alpha, cfg.beta)
+        else:
+            def leaf(g, a):
+                M = fmem.expsum_memory_term(a, coeffs)
+                delta = -(cfg.alpha * g + cfg.beta * M.astype(g.dtype))
+                return delta, fmem.expsum_push(a, rates, g)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_a = treedef.flatten_up_to(state["acc"])
+        out = [leaf(g, a) for g, a in zip(flat_g, flat_a)]
+        delta = treedef.unflatten([o[0] for o in out])
+        acc = treedef.unflatten([o[1] for o in out])
+        return delta, {"step": state["step"] + 1, "acc": acc}
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------------ helpers
+
+def apply_updates(params: Params, delta: Any) -> Params:
+    return jax.tree.map(lambda p, d: (p + d.astype(p.dtype)), params, delta)
+
+
+def memory_bytes(params: Params, cfg: FrodoConfig) -> int:
+    """Thm 2.2 accounting: O(Tn) exact / O(Kn) expsum state, in bytes."""
+    n = sum(int(np.prod(p.shape)) * p.dtype.itemsize
+            for p in jax.tree.leaves(params))
+    mult = cfg.T if cfg.memory_mode == "exact" else cfg.K
+    return mult * n

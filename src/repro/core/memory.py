@@ -1,0 +1,138 @@
+"""Fractional-order memory: power-law gradient weighting (FrODO §2).
+
+The paper's memory term is
+
+    M_i^(k) = sum_{n=1..T} mu(n; lambda) * g_i^(k-n),
+    mu(n; lambda) = mu0(n; lambda) / max_n mu0(n; lambda),
+    mu0(n; lambda) = n^(lambda - 1)            (power-law decay, lambda in (0,1))
+
+Since mu0 is maximal at n=1 and mu0(1)=1, the normalized weights are simply
+mu(n) = n^(lambda-1).
+
+Two representations are provided:
+
+* ``exact``  — a rolling buffer of the last T gradients (paper-faithful,
+  O(T n) state, Thm 2.2).
+* ``expsum`` — beyond-paper: approximate the power-law kernel on [1, T] by a
+  sum of K exponentials  n^(lambda-1) ~= sum_k c_k r_k^n  so the memory term
+  is maintained with K EMA accumulators (O(K n) state).  This is the classic
+  exponential-sum (Prony / Beylkin–Monzon style least-squares) compression of
+  a completely monotone kernel, and is what makes FrODO viable at LLM scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def mu_weights(T: int, lam: float, exponent_scale: float = 1.0) -> np.ndarray:
+    """Normalized fractional weights mu(n; lambda) for n = 1..T.
+
+    ``exponent_scale`` lets the (possibly OCR-duplicated) paper formula
+    ``(n^(lambda-1))^2`` be selected with exponent_scale=2.0; default is the
+    single power law.
+    """
+    if not (0.0 <= lam <= 1.0):
+        raise ValueError(f"lambda must be in [0,1], got {lam}")
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    n = np.arange(1, T + 1, dtype=np.float64)
+    mu0 = n ** (exponent_scale * (lam - 1.0))
+    return (mu0 / mu0.max()).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Exponential-sum compression of the power-law kernel.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def fit_expsum(T: int, lam: float, K: int = 8,
+               exponent_scale: float = 1.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Fit  mu(n) ~= sum_k c_k * r_k^n  on n = 1..T by linear least squares.
+
+    Rates r_k are fixed log-spaced decay scales covering [1, T]; coefficients
+    c_k solve the (weighted) LS problem.  Returns (rates[K], coeffs[K]).
+
+    Relative L2 error is typically ~1e-3 for K=8, T=100 — see
+    tests/test_memory.py for the sweep.
+
+    tau_max is capped at T (not beyond): the paper's kernel TRUNCATES at T,
+    and exponentials slower than T keep pushing the iterate long after the
+    window — measured on the Exp-1 quadratic, tau_max=4T slows convergence
+    6x (2417 vs 561 iters; exact window: 408) while tau_max=T costs <2x the
+    fit error.  See benchmarks/ablations.py.
+    """
+    mu = mu_weights(T, lam, exponent_scale)
+    n = np.arange(1, T + 1, dtype=np.float64)
+    # decay time-scales tau log-spaced in [0.5, T]; r = exp(-1/tau)
+    taus = np.geomspace(0.5, 1.0 * T, K)
+    rates = np.exp(-1.0 / taus)
+    A = rates[None, :] ** n[:, None]                      # (T, K)
+    # weight the fit by 1/mu so relative error is controlled across the tail
+    w = 1.0 / np.maximum(mu, 1e-12)
+    coeffs, *_ = np.linalg.lstsq(A * w[:, None], mu * w, rcond=None)
+    return rates, coeffs
+
+
+def expsum_error(T: int, lam: float, K: int = 8) -> float:
+    """Relative L2 error of the exp-sum fit against the exact weights."""
+    mu = mu_weights(T, lam)
+    rates, coeffs = fit_expsum(T, lam, K)
+    n = np.arange(1, T + 1, dtype=np.float64)
+    approx = (rates[None, :] ** n[:, None]) @ coeffs
+    return float(np.linalg.norm(approx - mu) / np.linalg.norm(mu))
+
+
+# ---------------------------------------------------------------------------
+# Memory-state operations (pure functions on single arrays; the optimizer
+# maps them over pytrees).  The exact mode keeps a circular buffer
+# hist[T, ...] plus an integer cursor; slot ``(cursor - n) mod T`` holds
+# g^(k-n) after k >= T steps (before that, unfilled slots are zero, which
+# matches the paper's implicit zero-padding of pre-history gradients).
+# ---------------------------------------------------------------------------
+
+def exact_init(param: jax.Array, T: int) -> jax.Array:
+    return jnp.zeros((T,) + param.shape, dtype=param.dtype)
+
+
+def exact_memory_term(hist: jax.Array, cursor: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """M = sum_n mu(n) * hist[(cursor - n) mod T].
+
+    ``weights`` is the static mu vector (T,).  Implemented as a weighted
+    tensordot after rolling the weight vector (cheaper than rolling the
+    history buffer: T scalar ops vs T*n memory traffic).
+    """
+    T = hist.shape[0]
+    # slot s holds g^(k - n) with n = (cursor - s) mod T  (cursor = k mod T,
+    # pointing one past the most recent write).  Build w_slot[s] = mu[n(s)].
+    s = jnp.arange(T)
+    n = jnp.mod(cursor - s, T)
+    n = jnp.where(n == 0, T, n)                            # n in 1..T
+    w_slot = weights[n - 1].astype(hist.dtype)
+    return jnp.tensordot(w_slot, hist, axes=(0, 0))
+
+
+def exact_push(hist: jax.Array, cursor: jax.Array, g: jax.Array) -> jax.Array:
+    """Write g^(k) into the circular buffer at ``cursor``."""
+    return jax.lax.dynamic_update_index_in_dim(
+        hist, g.astype(hist.dtype), cursor, axis=0)
+
+
+def expsum_init(param: jax.Array, K: int) -> jax.Array:
+    return jnp.zeros((K,) + param.shape, dtype=jnp.float32)
+
+
+def expsum_memory_term(acc: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """M = sum_k c_k * S_k   with  S_k^(t) = sum_{n>=1} r_k^n g^(t-n)."""
+    return jnp.tensordot(coeffs.astype(acc.dtype), acc, axes=(0, 0))
+
+
+def expsum_push(acc: jax.Array, rates: jax.Array, g: jax.Array) -> jax.Array:
+    """S_k <- r_k * (S_k + g^(t))  — advances the EMA accumulators one step."""
+    r = rates.astype(acc.dtype).reshape((-1,) + (1,) * g.ndim)
+    return r * (acc + g.astype(acc.dtype)[None])

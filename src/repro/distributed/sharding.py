@@ -1,0 +1,188 @@
+"""Logical-axis sharding: models annotate activations/params with logical
+axis names; a rule table maps them to mesh axes.  Outside a mesh context the
+annotations are no-ops, so the same model code runs on 1 CPU device and on
+the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Any] = {
+    # logical axis -> mesh axis (or tuple, or None)
+    "agent": None,        # set by the launcher to the agent mesh axes
+    "batch": "data",      # per-agent batch over leftover data axes
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "kv_seq": None,       # decode KV-cache sequence axis
+    "fsdp": None,         # param dim-0 axis for FSDP-within-agent
+    "frames": None,
+    "state": None,
+}
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Any], mesh: Optional[Mesh] = None):
+    prev = getattr(_ctx, "rules", None), getattr(_ctx, "mesh", None)
+    _ctx.rules, _ctx.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _ctx.rules, _ctx.mesh = prev
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return getattr(_ctx, "rules", None)
+
+
+def current_mesh():
+    return getattr(_ctx, "mesh", None)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]],
+                    rules: Optional[Dict[str, Any]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    spec = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax) if ax else None
+        # a mesh axis may appear only once in a PartitionSpec
+        if m is None:
+            spec.append(None)
+            continue
+        ms = tuple(m) if isinstance(m, (tuple, list)) else (m,)
+        ms = tuple(a for a in ms if a not in used)
+        used.update(ms)
+        spec.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation ``x`` to the sharding implied by logical axes.
+    No-op when no rules/mesh are active (single-device tests).
+
+    Dims that resolve to no mesh axis are replicated; named axes that do
+    not divide the dim are dropped.  (Leaving them UNCONSTRAINED was tried
+    in the perf pass: it cut collective bytes 35% on minicpm3 but let the
+    partitioner triple the memory term — recorded in EXPERIMENTS.md.)"""
+    rules = current_rules()
+    mesh = getattr(_ctx, "mesh", None)
+    if rules is None or mesh is None:
+        return x
+    spec = logical_to_spec(axes, rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = list(tuple(spec)) + [None] * (x.ndim - len(tuple(spec)))
+    out = []
+    for dim, p in zip(x.shape, parts):
+        if p is None:
+            out.append(None)
+            continue
+        ax = p if isinstance(p, tuple) else (p,)
+        prod = 1
+        for a in ax:
+            prod *= sizes[a]
+        out.append(p if (prod and dim % prod == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))
+
+
+# ---------------------------------------------------------------- params
+
+# Param-path regex -> logical axes per dim (matched against "a/b/c" paths).
+PARAM_AXIS_PATTERNS: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r".*embed/table$", ("vocab", "embed")),
+    (r".*lm_head/w$", ("embed", "vocab")),
+    (r".*wq/w$", ("fsdp", "heads", None)),
+    (r".*(wk|wv)/w$", ("fsdp", "kv_heads", None)),
+    (r".*wo_mla/w$", (None, None, "mlp")),
+    (r".*wo/w$", ("heads", None, "fsdp")),
+    (r".*(q_down|kv_down)/w$", ("fsdp", "mlp")),
+    (r".*(q_up|kv_up)/w$", ("mlp", "heads", None)),
+    (r".*(gate|up)/w$", ("fsdp", "mlp")),
+    (r".*down/w$", ("mlp", "fsdp")),
+    (r".*router/w$", ("fsdp", None)),
+    (r".*experts/(gate|up)$", ("expert", "fsdp", "mlp")),
+    (r".*experts/down$", ("expert", "mlp", "fsdp")),
+    (r".*(in_proj|in_x|in_gate)/w$", ("fsdp", "mlp")),
+    (r".*(out_proj|out)/w$", ("mlp", "fsdp")),
+    (r".*conv/w$", (None, "mlp")),
+    (r".*rg_(wa|wx)/w$", ("fsdp", "mlp")),
+)
+
+
+def param_spec(path: str, ndim: int, has_layer_dim: bool,
+               rules: Dict[str, Any]) -> P:
+    """PartitionSpec for one param leaf.  Dim 0 is the agent-stack dim
+    (added by the trainer); ``has_layer_dim`` marks scan-stacked leaves whose
+    next dim is the layer index."""
+    logical: Tuple[Optional[str], ...] = ()
+    for pat, axes in PARAM_AXIS_PATTERNS:
+        if re.match(pat, path):
+            logical = axes
+            break
+    prefix = ("agent",) + ((None,) if has_layer_dim else ())
+    want = prefix + logical
+    # pad/trim to ndim
+    want = (want + (None,) * ndim)[:ndim]
+    return logical_to_spec(want, rules)
+
+
+def spec_tree(params: Any, rules: Dict[str, Any], agent_stacked: bool = True,
+              n_layers_hint: int = 0) -> Any:
+    """Build a PartitionSpec pytree for a (possibly agent-stacked) param tree.
+
+    Leaf paths are derived from the dict structure.  Scan-stacked blocks live
+    under a key containing 'blocks'/'layers' (their dim after the agent dim is
+    the layer index).
+    """
+    flat = _flatten_with_paths(params)
+    out = {}
+    for path, leaf in flat.items():
+        has_layer = ("blocks" in path or "layers" in path
+                     or "groups" in path)
+        nd = len(leaf.shape)
+        if not agent_stacked:
+            # strip the agent entry by computing with a dummy leading dim
+            sp = param_spec(path, nd + 1, has_layer, rules)
+            sp = P(*tuple(sp)[1:]) if len(tuple(sp)) > 0 else P()
+        else:
+            sp = param_spec(path, nd, has_layer, rules)
+        out[path] = sp
+    return _unflatten_with_paths(out)
+
+
+def _flatten_with_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    flat = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            flat.update(_flatten_with_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        flat[prefix] = tree
+    return flat
+
+
+def _unflatten_with_paths(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root

@@ -1,0 +1,60 @@
+"""jit'd wrappers: arbitrary-shape params -> 2-D tiles -> Pallas kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import memory as fmem
+from repro.kernels import frodo_update as K
+
+LANE = K.LANE
+
+
+def _to_2d(x: jax.Array):
+    """Flatten to (R, LANE), zero-padded.  Returns (x2, n)."""
+    n = int(np.prod(x.shape)) if x.ndim else 1
+    R = max(1, -(-n // LANE))
+    pad = R * LANE - n
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    return flat.reshape(R, LANE), n
+
+
+def _from_2d(x2: jax.Array, shape, n: int):
+    return x2.reshape(-1)[:n].reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("alpha", "beta"))
+def frodo_update(g: jax.Array, hist: jax.Array, cursor: jax.Array,
+                 weights: jax.Array, alpha: float, beta: float):
+    """Fused exact-memory FrODO update for one param leaf.
+    g: (...); hist: (T, ...); weights: (T,) mu.  Returns (delta, new_hist)."""
+    T = hist.shape[0]
+    # rotate mu onto buffer slots: slot s holds g^(k-n), n = (cursor-s) mod T
+    s = jnp.arange(T)
+    nn = jnp.mod(cursor - s, T)
+    nn = jnp.where(nn == 0, T, nn)
+    w_slot = weights[nn - 1]
+    g2, n = _to_2d(g)
+    h2 = jax.vmap(lambda h: _to_2d(h)[0])(hist)
+    delta2 = K.exact_update_2d(g2, h2, w_slot, alpha, beta)
+    delta = _from_2d(delta2, g.shape, n)
+    new_hist = fmem.exact_push(hist, cursor, g)
+    return delta, new_hist
+
+
+@partial(jax.jit, static_argnames=("alpha", "beta"))
+def frodo_expsum_update(g: jax.Array, acc: jax.Array, rates: jax.Array,
+                        coeffs: jax.Array, alpha: float, beta: float):
+    """Fused exp-sum FrODO update.  acc: (K, ...).  Returns (delta, new_acc)."""
+    g2, n = _to_2d(g)
+    a2 = jax.vmap(lambda a: _to_2d(a)[0])(acc)
+    delta2, newacc2 = K.expsum_update_2d(g2, a2, rates, coeffs, alpha, beta)
+    delta = _from_2d(delta2, g.shape, n)
+    new_acc = jax.vmap(lambda a, ref: _from_2d(a, ref.shape, n))(
+        newacc2, acc)
+    return delta, new_acc

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the fused FrODO update kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import memory as fmem
+
+
+def frodo_update_ref(g: jax.Array, hist: jax.Array, cursor: jax.Array,
+                     weights: jax.Array, alpha: float, beta: float):
+    """Exact-memory fused update.
+    g: (...,), hist: (T, ...), cursor: scalar int, weights: (T,) mu.
+    Returns (delta, new_hist)."""
+    M = fmem.exact_memory_term(hist, cursor, weights)
+    delta = -(alpha * g + beta * M.astype(g.dtype))
+    new_hist = fmem.exact_push(hist, cursor, g)
+    return delta, new_hist
+
+
+def frodo_expsum_update_ref(g: jax.Array, acc: jax.Array, rates: jax.Array,
+                            coeffs: jax.Array, alpha: float, beta: float):
+    """Exp-sum fused update.  acc: (K, ...).  Returns (delta, new_acc)."""
+    M = fmem.expsum_memory_term(acc, coeffs)
+    delta = -(alpha * g + beta * M.astype(g.dtype))
+    new_acc = fmem.expsum_push(acc, rates, g)
+    return delta, new_acc

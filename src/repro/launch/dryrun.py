@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost analysis + the collective schedule.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+With --all it sweeps every supported (arch x shape).  Results are JSON files
+consumed by benchmarks/roofline.py.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry as REG
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.serving.engine import make_prefill, make_serve_step
+from repro.training import train_step as TS
+from repro.utils import flops as FL
+
+# --------------------------------------------------------- collective parse
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# effective bytes moved per participating device, as a multiple of the
+# parsed (per-device result) tensor bytes, ring-algorithm model
+_COLL_FACTOR = {"all-gather": 1.0,        # receives (N-1)/N of result ~ 1x
+                "all-reduce": 2.0,        # reduce-scatter + all-gather
+                "reduce-scatter": 1.0,
+                "all-to-all": 1.0,
+                "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device bytes of every collective op in the partitioned HLO."""
+    per_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, kind = m.groups()
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims \
+            else 1
+        b = n * _DTYPE_BYTES[dtype]
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    eff = sum(_COLL_FACTOR[k] * v for k, v in per_kind.items())
+    return {"bytes_by_kind": per_kind, "counts": counts,
+            "effective_bytes_per_device": eff}
+
+
+# ----------------------------------------------------------------- lowering
+
+def shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_train(cfg: ModelConfig, shape, mesh, multi_pod: bool,
+                tc: Optional[TS.TrainConfig] = None):
+    tc = tc or TS.TrainConfig(microbatches=8)
+    n_agents = TS.n_agents_for(cfg, mesh, multi_pod)
+    n_pods = 2 if multi_pod else 1
+    rules = TS.build_rules(cfg, multi_pod)
+    state_shapes = TS.abstract_train_state(cfg, tc, n_agents)
+    state_specs = TS.train_state_specs(state_shapes, cfg, rules, mesh)
+    batch = REG.input_specs(cfg, shape, n_agents)
+    b_specs = TS.batch_specs(batch, rules, mesh)
+    step = TS.make_train_step(cfg, tc, n_agents, n_pods)
+    with SH.use_rules(rules, mesh):
+        jitted = jax.jit(
+            step,
+            in_shardings=(shardings(state_specs, mesh),
+                          shardings(b_specs, mesh)),
+            donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, batch)
+    return lowered, {"n_agents": n_agents, "rules": {k: str(v) for k, v
+                                                     in rules.items()}}
+
+
+def lower_prefill(cfg: ModelConfig, shape, mesh, multi_pod: bool):
+    rules = TS.serve_rules(cfg, multi_pod, shape.global_batch, mesh)
+    p_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                              jax.random.key(0))
+    p_specs = TS.param_specs(p_shapes, rules, mesh, agent_stacked=False)
+    batch = REG.input_specs(cfg, shape)
+    b_specs = TS.batch_specs_serve(batch, rules, mesh)
+    fn = make_prefill(cfg)
+    with SH.use_rules(rules, mesh):
+        jitted = jax.jit(fn, in_shardings=(shardings(p_specs, mesh),
+                                           shardings(b_specs, mesh)))
+        lowered = jitted.lower(p_shapes, batch)
+    return lowered, {"rules": {k: str(v) for k, v in rules.items()}}
+
+
+def lower_decode(cfg: ModelConfig, shape, mesh, multi_pod: bool,
+                 weights_fsdp: bool = False):
+    rules = TS.serve_rules(cfg, multi_pod, shape.global_batch, mesh,
+                           weights_fsdp)
+    window = REG.decode_window(cfg, shape)
+    p_shapes = jax.eval_shape(lambda k: T.init_params(k, cfg),
+                              jax.random.key(0))
+    p_specs = TS.param_specs(p_shapes, rules, mesh, agent_stacked=False)
+    cache_shapes = jax.eval_shape(
+        lambda: D.init_cache(cfg, shape.global_batch, shape.seq_len, window))
+    c_specs = TS.cache_specs(cache_shapes, rules, mesh)
+    batch = REG.input_specs(cfg, shape)
+    fn = make_serve_step(cfg, window)
+    with SH.use_rules(rules, mesh):
+        jitted = jax.jit(
+            fn,
+            in_shardings=(shardings(p_specs, mesh),
+                          shardings(c_specs, mesh),
+                          NamedSharding(mesh, P()),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,))
+        lowered = jitted.lower(p_shapes, cache_shapes, batch["tokens"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered, {"rules": {k: str(v) for k, v in rules.items()},
+                     "window_override": window}
+
+
+def _lower_for(cfg, shape, mesh, multi_pod, tc):
+    if shape.kind == "train":
+        return lower_train(cfg, shape, mesh, multi_pod, tc)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, shape, mesh, multi_pod)
+    return lower_decode(cfg, shape, mesh, multi_pod)
+
+
+def _analyze(lowered) -> Dict[str, Any]:
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    return {
+        "compiled": compiled,
+        "memory": {k: int(getattr(mem, k, 0) or 0)
+                   for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes",
+                             "generated_code_size_in_bytes",
+                             "alias_size_in_bytes")},
+        "cost": {"flops": float(cost.get("flops", 0.0)),
+                 "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "collectives": parse_collectives(compiled.as_text()),
+    }
+
+
+def _affine_extrapolate(p2: Dict[str, Any], p3: Dict[str, Any],
+                        L: int) -> Dict[str, Any]:
+    """f(L) = a + b*L from probes at trip counts 2 and 3 (per-device)."""
+    def ab(f2, f3):
+        b = f3 - f2
+        return f2 - 2 * b, b
+
+    out: Dict[str, Any] = {}
+    for key in ("flops", "bytes_accessed"):
+        a, b = ab(p2["cost"][key], p3["cost"][key])
+        out[key] = a + b * L
+    coll = {}
+    kinds = set(p2["collectives"]["bytes_by_kind"]) |         set(p3["collectives"]["bytes_by_kind"])
+    for k in kinds:
+        a, b = ab(p2["collectives"]["bytes_by_kind"].get(k, 0.0),
+                  p3["collectives"]["bytes_by_kind"].get(k, 0.0))
+        coll[k] = max(a + b * L, 0.0)
+    out["collective_bytes_by_kind"] = coll
+    out["collective_effective_bytes_per_device"] = sum(
+        _COLL_FACTOR[k] * v for k, v in coll.items())
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Optional[str] = None,
+            tc: Optional[TS.TrainConfig] = None,
+            tag: str = "", probes: bool = True,
+            cfg_override=None) -> Dict[str, Any]:
+    cfg = cfg_override or REG.get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = REG.shape_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "kind": shape.kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        _emit(rec, out_dir, tag)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered, meta = _lower_for(cfg, shape, mesh, multi_pod, tc)
+        rec.update(meta)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        an = _analyze(lowered)
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["memory"] = an["memory"]
+        rec["cost"] = an["cost"]
+        rec["collectives"] = an["collectives"]
+
+        # analytic flops (closed form; HLO cost undercounts scan bodies)
+        window = REG.decode_window(cfg, shape) or 0
+        tc_eff = tc or TS.TrainConfig(microbatches=8)
+        rec["analytic"] = FL.analytic(cfg, shape, shape.kind, window,
+                                      remat=tc_eff.remat)
+        rec["analytic"]["hbm_bytes"] = FL.hbm_bytes(
+            cfg, shape, shape.kind,
+            n_agents=rec.get("n_agents", 1), K=tc_eff.K, window=window)
+
+        if probes:
+            # affine-in-L extrapolation of per-device HLO cost + collectives
+            L = REG.scan_trip_count(cfg)
+            pa = {}
+            for k in (2, 3):
+                probe_cfg = REG.reduced_layers(cfg, k).replace(
+                    unroll_scan=True)
+                lw, _ = _lower_for(probe_cfg, shape, mesh, multi_pod, tc)
+                pa[k] = _analyze(lw)
+            rec["extrapolated"] = _affine_extrapolate(pa[2], pa[3], L)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    _emit(rec, out_dir, tag)
+    return rec
+
+
+def _emit(rec: Dict[str, Any], out_dir: Optional[str], tag: str = ""):
+    line = (f"[{rec['status']:7s}] {rec['arch']:22s} {rec['shape']:12s} "
+            f"{rec['mesh']:8s}")
+    if rec["status"] == "ok":
+        m = rec["memory"]
+        per_dev = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"] +
+                   m["output_size_in_bytes"] - m.get("alias_size_in_bytes", 0))
+        line += (f" flops/dev={rec['cost']['flops']:.3e}"
+                 f" mem/dev={per_dev/2**30:.2f}GiB"
+                 f" coll/dev={rec['collectives']['effective_bytes_per_device']/2**30:.3f}GiB"
+                 f" (lower {rec.get('lower_s')}s compile {rec.get('compile_s')}s)")
+    elif rec["status"] == "error":
+        line += " " + rec["error"][:160]
+    else:
+        line += " " + rec.get("reason", "")[:100]
+    print(line, flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"
+        rec = dict(rec)
+        rec.pop("traceback", None)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=REG.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(REG.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out)
+                n_bad += rec["status"] == "error"
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

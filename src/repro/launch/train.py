@@ -1,0 +1,66 @@
+"""Training launcher.
+
+On the production fleet this process runs per host with a real TPU mesh;
+here it runs the same code path on however many devices exist (optionally
+forced host devices via --force-devices, which must be set before jax
+initializes — hence the env re-exec guard).
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --smoke --steps 20 --agents 4
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--agents", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch-per-agent", type=int, default=2)
+    ap.add_argument("--optimizer", default="frodo")
+    ap.add_argument("--alpha", type=float, default=0.02)
+    ap.add_argument("--beta", type=float, default=0.008)
+    ap.add_argument("--lam", type=float, default=0.15)
+    ap.add_argument("--T", type=int, default=40)
+    ap.add_argument("--memory-mode", default="exact",
+                    choices=("exact", "expsum"))
+    ap.add_argument("--topology", default="complete")
+    ap.add_argument("--consensus-interval", type=int, default=1)
+    ap.add_argument("--force-devices", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    args = ap.parse_args()
+
+    if args.force_devices and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.force_devices}")
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+    from repro.configs import registry as REG
+    from repro.data.synthetic import TokenPipeline, augment_modalities
+    from repro.training.trainer import Trainer
+    from repro.training.train_step import TrainConfig
+
+    cfg = (REG.get_smoke_config(args.arch) if args.smoke
+           else REG.get_config(args.arch))
+    tc = TrainConfig(optimizer=args.optimizer, alpha=args.alpha,
+                     beta=args.beta, lam=args.lam, T=args.T,
+                     memory_mode=args.memory_mode, remat=not args.smoke,
+                     topology=args.topology,
+                     consensus_interval=args.consensus_interval)
+    trainer = Trainer(cfg, tc, n_agents=args.agents,
+                      ckpt_dir=args.ckpt_dir, log_every=5)
+    state = trainer.init()
+    data = augment_modalities(
+        iter(TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                           batch_per_agent=args.batch_per_agent,
+                           n_agents=args.agents)), cfg)
+    trainer.run(state, data, args.steps)
+
+
+if __name__ == "__main__":
+    main()

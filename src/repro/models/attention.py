@@ -1,0 +1,334 @@
+"""Attention: GQA (+ qk-norm, RoPE, sliding window), blockwise long-sequence
+attention, KV-cache decode, and MLA (multi-head latent attention).
+
+Memory-efficient ("blockwise") attention is pure JAX flash attention — an
+online-softmax scan over KV chunks — used automatically when the sequence
+exceeds ``cfg.attn_direct_max`` so 32k prefill never materializes an S×S
+score matrix.  FLOPs are identical to direct attention; peak memory is
+O(S·chunk) per head.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ================================================================== GQA
+
+def gqa_init(key, cfg: ModelConfig) -> dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    d, H, G, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 4)
+    p = {"wq": {"w": L.dense_init(ks[0], d, H, hd, dtype=dt)},
+         "wk": {"w": L.dense_init(ks[1], d, G, hd, dtype=dt)},
+         "wv": {"w": L.dense_init(ks[2], d, G, hd, dtype=dt)},
+         "wo": {"w": L.dense_init(ks[3], H, hd, d, dtype=dt)}}
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dt)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dt)}
+    return p
+
+
+def _project_qkv(params, x, positions, cfg: ModelConfig, rope: bool = True):
+    q = jnp.einsum("...d,dhk->...hk", x, params["wq"]["w"])
+    k = jnp.einsum("...d,dgk->...gk", x, params["wk"]["w"])
+    v = jnp.einsum("...d,dgk->...gk", x, params["wv"]["w"])
+    if cfg.qk_norm:
+        q = L.rmsnorm_nd(params["q_norm"]["scale"], q, cfg.norm_eps)
+        k = L.rmsnorm_nd(params["k_norm"]["scale"], k, cfg.norm_eps)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int):
+    """(…, Sq, Sk) additive bias from absolute positions."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window > 0:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _direct_attn(q, k, v, bias):
+    """q:(B,Sq,H,hd) k:(B,Sk,G,hd) v:(B,Sk,G,vd) bias:(B|1,1,Sq,Sk)
+    -> (B,Sq,H,vd).  vd may differ from hd (MLA)."""
+    B, Sq, H, hd = q.shape
+    G, vd = k.shape[2], v.shape[-1]
+    qg = q.reshape(B, Sq, G, H // G, hd)
+    s = jnp.einsum("bsgrh,btgh->bgrst", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd) + bias[:, :, None]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgrst,btgh->bsgrh", p, v)
+    return o.reshape(B, Sq, H, vd)
+
+
+def _blockwise_attn(q, k, v, q_pos, k_pos, causal, window, chunk,
+                    block_skip: bool = True):
+    """Flash-style online-softmax attention, scanning KV chunks per Q chunk.
+
+    Layout: GQA KV heads are broadcast to the full H head dim before the
+    chunk loop so every intermediate keeps the (heads -> "model" mesh axis)
+    sharding — the grouped (G, H/G) layout cannot shard when G < TP degree.
+
+    ``block_skip``: skip fully-masked KV chunks (upper-triangle blocks under
+    causal masking / outside the sliding window) via lax.cond — halves the
+    FLOPs of causal attention versus masking alone.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, G, vd = k.shape[1], k.shape[2], v.shape[-1]
+    if G != H:
+        k = jnp.repeat(k, H // G, axis=2)
+        v = jnp.repeat(v, H // G, axis=2)
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    nq, nk = Sq // cq, Sk // ck
+    assert Sq % cq == 0 and Sk % ck == 0, "seq must divide attn chunk"
+    qg = q.reshape(B, nq, cq, H, hd)
+    kc = k.reshape(B, nk, ck, H, hd)
+    vc = v.reshape(B, nk, ck, H, vd)
+    qg = shard(qg, "batch", None, "seq", "heads")
+    kc = shard(kc, "batch", None, "seq", "heads")
+    vc = shard(vc, "batch", None, "seq", "heads")
+    qp = q_pos.reshape(nq, cq)
+    kp = k_pos.reshape(nk, ck)
+    scale = 1.0 / np.sqrt(hd)
+
+    def q_block(qi):
+        qb = qg[:, qi]                                   # (B,cq,H,hd)
+        qpb = qp[qi]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+
+            @jax.checkpoint
+            def compute(args):
+                m, l, acc = args
+                s = jnp.einsum("bshk,bthk->bhst", qb, kc[:, kj]
+                               ).astype(jnp.float32) * scale
+                s = s + _mask_bias(qpb, kp[kj], causal, window)[None, None]
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhst,bthk->bhsk", p, vc[:, kj].astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            if block_skip and (causal or window > 0):
+                reachable = kp[kj].min() <= qpb.max()
+                if window > 0:
+                    reachable &= kp[kj].max() > qpb.min() - window
+                m, l, acc = jax.lax.cond(
+                    reachable, compute, lambda a: a, (m, l, acc))
+            else:
+                m, l, acc = compute((m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,H,cq,vd)
+        return out.transpose(0, 2, 1, 3)                 # (B,cq,H,vd)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))           # (nq,B,cq,H,vd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, vd)
+    return out.astype(v.dtype)
+
+
+def self_attention(params, x, positions, cfg: ModelConfig,
+                   causal: bool = True, window: int = 0) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    q = shard(q, "batch", "seq", "heads")
+    k = shard(k, "batch", "seq", "kv_heads")
+    v = shard(v, "batch", "seq", "kv_heads")
+    S = x.shape[-2]
+    if S <= cfg.attn_direct_max:
+        bias = _mask_bias(positions, positions, causal, window)
+        while bias.ndim < 4:
+            bias = bias[None]
+        o = _direct_attn(q, k, v, bias)
+    else:
+        pos1d = positions.reshape(-1)[-S:] if positions.ndim > 1 else positions
+        o = _blockwise_attn(q, k, v, pos1d, pos1d, causal, window,
+                            cfg.attn_chunk)
+    o = shard(o, "batch", "seq", "heads")
+    return jnp.einsum("...hk,hkd->...d", o, params["wo"]["w"])
+
+
+# ----------------------------------------------------------------- decode
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, Scache, G, hd)
+    v: jax.Array
+    # Scache = window size when windowed (ring buffer), else max seq len.
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+               dtype) -> KVCache:
+    size = min(window, max_len) if window > 0 else max_len
+    G, hd = cfg.n_kv_heads, cfg.hd()
+    z = jnp.zeros((batch, size, G, hd), dtype)
+    return KVCache(z, z)
+
+
+def decode_attention(params, x, cache: KVCache, pos: jax.Array,
+                     cfg: ModelConfig, window: int = 0):
+    """One-token decode.  x: (B,1,d); pos: scalar current position.
+    Returns (out (B,1,d), new cache)."""
+    q, k_new, v_new = _project_qkv(params, x, pos[None, None], cfg)
+    Sc = cache.k.shape[1]
+    slot = jnp.mod(pos, Sc) if window > 0 else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            slot, axis=1)
+    k = shard(k, "batch", "kv_seq", "kv_heads")
+    v = shard(v, "batch", "kv_seq", "kv_heads")
+    # absolute position held by each slot
+    idx = jnp.arange(Sc)
+    if window > 0:
+        # ring buffer: slot s holds the largest p <= pos with p % Sc == s
+        k_pos = pos - jnp.mod(pos - idx, Sc)
+    else:
+        k_pos = idx
+    valid = (k_pos <= pos) & (k_pos >= 0)
+    if window > 0:
+        valid &= k_pos > pos - window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[None, None, None]
+    B, _, H, hd = q.shape
+    G = k.shape[2]
+    qg = q.reshape(B, 1, G, H // G, hd)
+    s = jnp.einsum("bsgrh,btgh->bgrst", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd) + bias
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bgrst,btgh->bsgrh", p, v).reshape(B, 1, H, hd)
+    out = jnp.einsum("...hk,hkd->...d", o, params["wo"]["w"])
+    return out, KVCache(k, v)
+
+
+# ================================================================== MLA
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "q_down": {"w": L.dense_init(ks[0], d, m.q_lora_rank, dtype=dt)},
+        "q_norm": L.rmsnorm_init(m.q_lora_rank, dt),
+        "q_up": {"w": L.dense_init(ks[1], m.q_lora_rank, H, qk_dim, dtype=dt)},
+        "kv_down": {"w": L.dense_init(
+            ks[2], d, m.kv_lora_rank + m.qk_rope_dim, dtype=dt)},
+        "kv_norm": L.rmsnorm_init(m.kv_lora_rank, dt),
+        "kv_up": {"w": L.dense_init(ks[3], m.kv_lora_rank, H,
+                                    m.qk_nope_dim + m.v_head_dim, dtype=dt)},
+        "wo_mla": {"w": L.dense_init(ks[4], H, m.v_head_dim, d, dtype=dt)},
+    }
+
+
+def _mla_qkv_latent(params, x, positions, cfg: ModelConfig):
+    m = cfg.mla
+    # keep the low-rank latents sharded over the TP ("mlp") axis end-to-end:
+    # the q_up/kv_up contractions then run shard-local with one bf16
+    # all-reduce of the (much smaller) per-head outputs, instead of the
+    # partitioner gathering fp32 latent intermediates per layer.
+    cq_raw = jnp.einsum("...d,dr->...r", x, params["q_down"]["w"])
+    cq_raw = shard(cq_raw, "batch", "seq", "mlp")
+    cq = L.rmsnorm(params["q_norm"], cq_raw, cfg.norm_eps)
+    cq = shard(cq, "batch", "seq", "mlp")
+    q = jnp.einsum("...r,rhk->...hk", cq, params["q_up"]["w"])
+    q = shard(q, "batch", "seq", None, None)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = jnp.einsum("...d,dr->...r", x, params["kv_down"]["w"])
+    c_kv = L.rmsnorm(params["kv_norm"], ckv_full[..., :m.kv_lora_rank],
+                     cfg.norm_eps)
+    c_kv = shard(c_kv, "batch", "seq", "mlp")
+    k_rope = ckv_full[..., m.kv_lora_rank:]
+    k_rope = L.apply_rope(k_rope[..., None, :], positions,
+                          cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(params, x, positions, cfg: ModelConfig) -> jax.Array:
+    """Train/prefill MLA: expand the latent into per-head K/V (naive form)."""
+    m = cfg.mla
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(params, x, positions, cfg)
+    kv = jnp.einsum("...r,rhk->...hk", c_kv, params["kv_up"]["w"])
+    k_nope, v = kv[..., :m.qk_nope_dim], kv[..., m.qk_nope_dim:]
+    k_rope_h = jnp.broadcast_to(k_rope[..., None, :],
+                                k_rope.shape[:-1] + (H, m.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q = shard(q, "batch", "seq", "heads")
+    k = shard(k, "batch", "seq", "heads")
+    S = x.shape[-2]
+    if S <= cfg.attn_direct_max:
+        bias = _mask_bias(positions, positions, True, 0)
+        while bias.ndim < 4:
+            bias = bias[None]
+        o = _direct_attn(q, k, v, bias)
+    else:
+        pos1d = positions.reshape(-1)[-S:] if positions.ndim > 1 else positions
+        o = _blockwise_attn(q, k, v, pos1d, pos1d, True, 0, cfg.attn_chunk)
+    return jnp.einsum("...hk,hkd->...d", o, params["wo_mla"]["w"])
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (B, S, kv_lora_rank)  — compressed latent
+    k_rope: jax.Array     # (B, S, qk_rope_dim)
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                    jnp.zeros((batch, max_len, m.qk_rope_dim), dtype))
+
+
+def mla_decode(params, x, cache: MLACache, pos: jax.Array, cfg: ModelConfig,
+               window: int = 0):
+    """Absorbed-form MLA decode against the compressed latent cache:
+    scores are computed in the kv_lora_rank space (W_UK absorbed into q) so
+    the cache stays (rank + rope_dim) per token — MLA's serving win."""
+    m = cfg.mla
+    H = cfg.n_heads
+    q_nope, q_rope, c_new, kr_new = _mla_qkv_latent(params, x, pos[None, None], cfg)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    c_kv = shard(c_kv, "batch", "kv_seq")
+    w_uk = params["kv_up"]["w"][..., :m.qk_nope_dim]       # (r, H, nope)
+    w_uv = params["kv_up"]["w"][..., m.qk_nope_dim:]       # (r, H, v)
+    q_abs = jnp.einsum("b1hk,rhk->b1hr", q_nope, w_uk)     # absorbed q
+    s = (jnp.einsum("b1hr,btr->bh1t", q_abs, c_kv)
+         + jnp.einsum("b1hk,btk->bh1t", q_rope, k_rope)).astype(jnp.float32)
+    s = s / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    Sc = cache.c_kv.shape[1]
+    idx = jnp.arange(Sc)
+    valid = idx <= pos
+    if window > 0:
+        valid &= idx > pos - window
+    s = s + jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bh1t,btr->b1hr", p, c_kv)
+    o = jnp.einsum("b1hr,rhk->b1hk", o_lat, w_uv)
+    out = jnp.einsum("...hk,hkd->...d", o, params["wo_mla"]["w"])
+    return out, MLACache(c_kv, k_rope)

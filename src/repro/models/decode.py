@@ -1,0 +1,229 @@
+"""Single-token decode over a per-layer cache, for every family.
+
+``init_cache`` builds the cache pytree (stacked along the layer/scan dims to
+match the stacked params) and ``decode_step`` advances one token:
+
+    logits, cache = decode_step(params, cache, tokens(B,1), pos, cfg)
+
+Sliding-window archs (and the ``long_context_window`` serving override for
+dense archs at 500k) get ring-buffer KV caches of window size, SSM/hybrid
+get O(1) recurrent state — this is what makes ``long_500k`` lowerable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def _stack_cache(make_one, n: int):
+    one = make_one()
+    return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape),
+                        one)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window_override: Optional[int] = None) -> Dict[str, Any]:
+    dt = L.dtype_of(cfg.compute_dtype)
+    window = cfg.window if window_override is None else window_override
+    cache: Dict[str, Any] = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.attn_type == "mla":
+            make = lambda: A.mla_init_cache(cfg, batch, max_len, dt)
+        else:
+            make = lambda: A.init_cache(cfg, batch, max_len, window, dt)
+        n_moe = cfg.n_layers - (cfg.moe.n_dense_layers if cfg.moe else 0)
+        if cfg.family == "moe" and cfg.moe.n_dense_layers:
+            cache["dense_blocks"] = _stack_cache(make, cfg.moe.n_dense_layers)
+            cache["blocks"] = _stack_cache(make, n_moe)
+        else:
+            cache["blocks"] = _stack_cache(make, cfg.n_layers)
+    elif cfg.family == "ssm":
+        cache["blocks"] = _stack_cache(
+            lambda: S.mamba_init_cache(cfg, batch, dt), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        period = len(cfg.hybrid.pattern)
+        n_groups, tail = divmod(cfg.n_layers, period)
+        lw = min(cfg.hybrid.local_window, max_len)
+
+        def group_cache():
+            return {"rec1": R.rglru_init_cache(cfg, batch, dt),
+                    "rec2": R.rglru_init_cache(cfg, batch, dt),
+                    "attn": A.init_cache(cfg, batch, max_len, lw, dt)}
+        cache["groups"] = _stack_cache(group_cache, n_groups)
+        if tail:
+            cache["tail_blocks"] = _stack_cache(
+                lambda: R.rglru_init_cache(cfg, batch, dt), tail)
+    elif cfg.family == "audio":
+        cw = min(max_len, 8192)  # whisper decoder context is tiny anyway
+        cache["blocks"] = _stack_cache(
+            lambda: {"self": A.init_cache(cfg, batch, max_len, window, dt),
+                     "cross_k": jnp.zeros((batch, cfg.n_frames,
+                                           cfg.n_kv_heads, cfg.hd()), dt),
+                     "cross_v": jnp.zeros((batch, cfg.n_frames,
+                                           cfg.n_kv_heads, cfg.hd()), dt)},
+            cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+def encode_for_decode(params, cache, frames, cfg: ModelConfig):
+    """Audio: run the encoder and populate the per-layer cross K/V cache."""
+    enc = T.encode(params, frames, cfg)
+
+    def one(bp):
+        k = jnp.einsum("...d,dgk->...gk", enc, bp["xattn"]["wk"]["w"])
+        v = jnp.einsum("...d,dgk->...gk", enc, bp["xattn"]["wv"]["w"])
+        return k, v
+
+    k, v = jax.vmap(one)(params["blocks"])
+    cache = dict(cache)
+    blocks = dict(cache["blocks"])
+    blocks["cross_k"] = k.astype(cache["blocks"]["cross_k"].dtype)
+    blocks["cross_v"] = v.astype(cache["blocks"]["cross_v"].dtype)
+    cache["blocks"] = blocks
+    return cache
+
+
+# ------------------------------------------------------------ block steps
+
+def _dense_decode_block(bp, c, x, pos, cfg, use_moe, window):
+    h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        h, c = A.mla_decode(bp["attn"], h, c, pos, cfg, window)
+    else:
+        h, c = A.decode_attention(bp["attn"], h, c, pos, cfg, window)
+    x = x + h
+    h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        h, _ = MOE.moe_mlp(bp["moe"], h, cfg)
+    else:
+        h = L.mlp(bp["mlp"], h, cfg.activation)
+    return x + h, c
+
+
+def _audio_decode_block(bp, c, x, pos, cfg, window):
+    h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    h, self_c = A.decode_attention(bp["attn"], h, c["self"], pos, cfg, window)
+    x = x + h
+    h = L.rmsnorm(bp["ln_x"], x, cfg.norm_eps)
+    q = jnp.einsum("...d,dhk->...hk", h, bp["xattn"]["wq"]["w"])
+    bias = jnp.zeros((1, 1, 1, c["cross_k"].shape[1]), jnp.float32)
+    o = A._direct_attn(q, c["cross_k"], c["cross_v"], bias)
+    x = x + jnp.einsum("...hk,hkd->...d", o, bp["xattn"]["wo"]["w"])
+    h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(bp["mlp"], h, cfg.activation), \
+        {"self": self_c, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+
+def _hybrid_decode_group(bp, c, x, pos, cfg):
+    newc = {}
+    for kind, name in zip(cfg.hybrid.pattern, ("rec1", "rec2", "attn")):
+        sp, sc = bp[name], c[name]
+        h = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        if kind == "rec":
+            h, newc[name] = R.rglru_decode(sp["mix"], h, sc, cfg)
+        else:
+            h, newc[name] = A.decode_attention(
+                sp["mix"], h, sc, pos, cfg, cfg.hybrid.local_window)
+        x = x + h
+        h = L.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(sp["mlp"], h, cfg.activation)
+    return x, newc
+
+
+# --------------------------------------------------------------- the step
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                window_override: Optional[int] = None):
+    """tokens: (B, 1) int32; pos: scalar int32 (current position).
+    Returns (logits (B,1,V), new cache)."""
+    window = cfg.window if window_override is None else window_override
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "audio":
+        x = x + L.sinusoid_at(pos, cfg.d_model)[None, None].astype(x.dtype)
+    x = shard(x, "batch", None, "embed")
+    new_cache = dict(cache)
+
+    def scan_over(stacked_p, stacked_c, fn, x):
+        if cfg.unroll_scan:
+            n = jax.tree.leaves(stacked_c)[0].shape[0]
+            outs = []
+            for i in range(n):
+                bp = jax.tree.map(lambda l: l[i], stacked_p)
+                c = jax.tree.map(lambda l: l[i], stacked_c)
+                x, c = fn(bp, c, x)
+                outs.append(c)
+            new_c = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+            return x, new_c
+
+        def step(h, pc):
+            bp, c = pc
+            h, c = fn(bp, c, h)
+            return h, c
+        return jax.lax.scan(step, x, (stacked_p, stacked_c))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        use_moe = cfg.family == "moe"
+        if use_moe and "dense_blocks" in params:
+            x, dc = scan_over(
+                params["dense_blocks"], cache["dense_blocks"],
+                lambda bp, c, h: _dense_decode_block(
+                    bp, c, h, pos, cfg, False, window), x)
+            new_cache["dense_blocks"] = dc
+        x, bc = scan_over(
+            params["blocks"], cache["blocks"],
+            lambda bp, c, h: _dense_decode_block(
+                bp, c, h, pos, cfg, use_moe, window), x)
+        new_cache["blocks"] = bc
+    elif cfg.family == "ssm":
+        x, bc = scan_over(
+            params["blocks"], cache["blocks"],
+            lambda bp, c, h: _ssm_step(bp, c, h, cfg), x)
+        new_cache["blocks"] = bc
+    elif cfg.family == "hybrid":
+        x, gc = scan_over(
+            params["groups"], cache["groups"],
+            lambda bp, c, h: _hybrid_decode_group(bp, c, h, pos, cfg), x)
+        new_cache["groups"] = gc
+        if "tail_blocks" in params:
+            def tail_fn(bp, c, h):
+                hh = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+                hh, c = R.rglru_decode(bp["mix"], hh, c, cfg)
+                h = h + hh
+                hh = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+                return h + L.mlp(bp["mlp"], hh, cfg.activation), c
+            x, tc = scan_over(params["tail_blocks"], cache["tail_blocks"],
+                              tail_fn, x)
+            new_cache["tail_blocks"] = tc
+    elif cfg.family == "audio":
+        x, bc = scan_over(
+            params["blocks"], cache["blocks"],
+            lambda bp, c, h: _audio_decode_block(bp, c, h, pos, cfg, window),
+            x)
+        new_cache["blocks"] = bc
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x, cfg.logit_softcap)
+              if cfg.tie_embeddings
+              else L.lm_head(params["lm_head"], x, cfg.logit_softcap))
+    return logits, new_cache
+
+
+def _ssm_step(bp, c, h, cfg):
+    hh = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+    out, c = S.mamba_decode(bp["mix"], hh, c, cfg)
+    return h + out, c

@@ -1,0 +1,178 @@
+"""Shared primitive layers: norms, MLPs, embeddings, RoPE, inits.
+
+Params are plain nested dicts of jnp arrays; every layer is a pair of
+functions (init(key, cfg, ...) -> params, apply(params, x, ...) -> y).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, *out_dims: int, dtype, scale: float = 1.0):
+    """Fan-in scaled truncated-normal init; shape (d_in, *out_dims)."""
+    shape = (d_in,) + out_dims
+    std = scale / np.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_nd(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last dim with an explicit scale vector (qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------ activations
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                      # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ------------------------------------------------------------------- MLP
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": {"w": dense_init(ks[0], d_model, d_ff, dtype=dtype)},
+         "down": {"w": dense_init(ks[1], d_ff, d_model, dtype=dtype)}}
+    if gated:
+        p["gate"] = {"w": dense_init(ks[2], d_model, d_ff, dtype=dtype)}
+    return p
+
+
+def mlp(params: dict, x: jax.Array, act_name: str) -> jax.Array:
+    act = activation(act_name)
+    h = jnp.einsum("...d,df->...f", x, params["up"]["w"])
+    if "gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["gate"]["w"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, params["down"]["w"])
+
+
+# ------------------------------------------------------------- embedding
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    tbl = jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+    return {"table": tbl.astype(dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x, params["table"]).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype) -> dict:
+    return {"w": dense_init(key, d_model, vocab, dtype=dtype)}
+
+
+def lm_head(params: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,dv->...v", x, params["w"]).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# --------------------------------------------------------- grad barrier
+
+@jax.custom_vjp
+def grad_dtype_barrier(x: jax.Array) -> jax.Array:
+    """Identity whose backward casts the cotangent to the primal dtype.
+
+    The CE loss computes in fp32; without a barrier the fp32 cotangent
+    chain propagates through every backward dot of the network, doubling
+    backward activation traffic and collective bytes.  Inserted between
+    the residual stream and the (fp32) head."""
+    return x
+
+
+def _gdb_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)      # dtype-carrying residual
+
+
+def _gdb_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_dtype_barrier.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> np.ndarray:
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    inv = jnp.asarray(rope_freqs(hd, fraction, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (...,S,rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal embedding for one (traced) position; (d,) fp32."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * i / d))
+    return jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(d)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

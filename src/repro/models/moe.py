@@ -1,0 +1,147 @@
+"""Mixture-of-Experts with top-k routing and sort-based capacity dispatch.
+
+Dispatch strategy (TPU/pjit-native, adapted from dropping-MoE systems):
+tokens never build a (tokens × experts × capacity) one-hot — instead we
+
+  1. route: top-k expert ids + weights per token;
+  2. compute each assignment's position inside its expert via a stable sort
+     by expert id (argsort + running index − expert offset from cumulative
+     counts);
+  3. scatter token embeddings into a (E, C, d) capacity buffer (overflow
+     drops, capacity_factor controls C);
+  4. batched expert MLP: (E,C,d) × (E,d,ff) einsums — experts sharded over
+     the "expert" (model) mesh axis, so XLA emits the all-to-all-equivalent
+     collective around the scatter/gather;
+  5. gather outputs back per assignment and combine with router weights.
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned for the
+trainer to add.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.expert_d_ff, m.n_experts
+    ks = jax.random.split(key, 5)
+    std = 1.0 / np.sqrt(d)
+    p = {"router": {"w": L.dense_init(ks[0], d, E, dtype=jnp.float32)},
+         "experts": {
+             "gate": (jax.random.truncated_normal(ks[1], -3, 3, (E, d, ff),
+                                                  jnp.float32) * std).astype(dt),
+             "up": (jax.random.truncated_normal(ks[2], -3, 3, (E, d, ff),
+                                                jnp.float32) * std).astype(dt),
+             "down": (jax.random.truncated_normal(ks[3], -3, 3, (E, ff, d),
+                                                  jnp.float32)
+                      / np.sqrt(ff)).astype(dt)}}
+    if m.n_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, m.shared_d_ff or m.expert_d_ff,
+                                 True, dt)
+    return p
+
+
+def _capacity(n_tokens: int, m) -> int:
+    c = int(np.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts))
+    return max(8, int(np.ceil(c / 8)) * 8)
+
+
+def _dispatch_one(xt, top_w, top_e, E, k, C, params, cfg):
+    """Sort-based dispatch for one token group.  xt: (n, d)."""
+    n = xt.shape[0]
+    flat_e = top_e.reshape(-1)                             # (n*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    inv_order = jnp.argsort(order, stable=True)
+    counts = jnp.bincount(flat_e, length=E)                # tokens per expert
+    starts = jnp.cumsum(counts) - counts                   # offset per expert
+    rank_sorted = jnp.arange(n * k) - starts[flat_e[order]]
+    pos_in_e = rank_sorted[inv_order]                      # (n*k,)
+    keep = pos_in_e < C                                    # capacity drop
+
+    dest = jnp.where(keep, flat_e * C + pos_in_e, E * C)   # E*C = drop slot
+    token_idx = jnp.repeat(jnp.arange(n), k)
+    d = xt.shape[-1]
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dest].set(xt[token_idx])
+    return buf[:-1].reshape(E, C, d), dest, keep, token_idx
+
+
+def moe_mlp(params: dict, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    With ``dispatch_groups`` > 1 the token stream is split into G groups
+    aligned with the data-parallel shards: each group scatters only its own
+    tokens into a (G, E, C/G, d) capacity buffer whose group dim is sharded
+    over "batch" (data) and expert dim over "expert" (model), so the only
+    cross-device movement is the expert-parallel all-to-all — not a global
+    gather of the token buffer."""
+    m = cfg.moe
+    B, S, d = x.shape
+    N = B * S
+    E, k = m.n_experts, m.top_k
+    G = max(1, m.dispatch_groups)
+    assert N % G == 0, (N, G)
+    C = _capacity(N // G, m)
+    xt = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                 # (N,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    xg = xt.reshape(G, N // G, d)
+    wg = top_w.reshape(G, N // G, k)
+    eg = top_e.reshape(G, N // G, k)
+    xg = shard(xg, "batch", None, None)
+    buf, dest, keep, token_idx = jax.vmap(
+        lambda xt1, w1, e1: _dispatch_one(xt1, w1, e1, E, k, C, params,
+                                          cfg))(xg, wg, eg)
+    # buf: (G, E, C, d)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # ---- batched expert MLP (group dim rides along); gate and up are
+    # fused into one einsum so the capacity buffer streams from HBM once
+    act = L.activation(cfg.activation)
+    gu = jnp.concatenate([params["experts"]["gate"],
+                          params["experts"]["up"]], axis=-1)
+    ff = params["experts"]["gate"].shape[-1]
+    h2 = jnp.einsum("gecd,edf->gecf", buf, gu)
+    h = act(h2[..., :ff]) * h2[..., ff:]
+    h = shard(h, "batch", "expert", None, "mlp")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["experts"]["down"])
+    out_buf = shard(out_buf, "batch", "expert", None, None)
+
+    # ---- gather back and combine (within each group)
+    def combine_one(out_buf1, dest1, keep1, token_idx1, w1):
+        gathered = out_buf1.reshape(E * C, d)[
+            jnp.minimum(dest1, E * C - 1)]
+        gathered = jnp.where(keep1[:, None], gathered, 0.0)
+        ww = w1.reshape(-1)[:, None].astype(gathered.dtype)
+        return jnp.zeros((N // G, d), gathered.dtype).at[token_idx1].add(
+            gathered * ww)
+
+    out = jax.vmap(combine_one)(out_buf, dest, keep, token_idx, wg)
+    out = out.reshape(B, S, d).astype(x.dtype)
+    flat_e = top_e.reshape(-1)
+
+    if "shared" in params:
+        out = out + L.mlp(params["shared"], x, cfg.activation)
+
+    # ---- aux losses (fp32)
+    me = probs.mean(axis=0)                                 # mean router prob
+    ce = (jnp.bincount(flat_e, length=E) / (N * k)).astype(jnp.float32)
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = m.router_aux_weight * (load_balance + 0.001 * z_loss)
+    return out, aux

@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t)            # recurrence gate
+    i_t = sigmoid(W_x x_t)            # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Training runs the linear recurrence with an associative scan over the
+sequence; decode is the O(1) step.  The full residual block is
+conv1d(width 4) -> RG-LRU sandwiched between linear in/out projections with
+a GeLU gate branch (Griffin's "recurrent block").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return cfg.hybrid.d_rnn or cfg.d_model
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    d, dr = cfg.d_model, _d_rnn(cfg)
+    W = cfg.hybrid.conv_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c in [0.9, 0.999] at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2 * _C)))   # softplus^-1
+    return {
+        "in_x": {"w": L.dense_init(ks[0], d, dr, dtype=dt)},
+        "in_gate": {"w": L.dense_init(ks[1], d, dr, dtype=dt)},
+        "conv": {"w": (jax.random.normal(ks[2], (W, dr), jnp.float32)
+                       * 0.1).astype(dt),
+                 "b": jnp.zeros((dr,), dt)},
+        "rg_wa": {"w": L.dense_init(ks[5], dr, dr, dtype=dt, scale=0.5)},
+        "rg_wx": {"w": L.dense_init(ks[3], dr, dr, dtype=dt, scale=0.5)},
+        "lambda": lam,
+        "out": {"w": L.dense_init(jax.random.fold_in(key, 7), dr, d, dtype=dt)},
+    }
+
+
+def _gates(params, x):
+    """x: (..., dr) post-conv branch -> (log_a, gated input) in fp32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf,
+                                  params["rg_wa"]["w"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf,
+                                  params["rg_wx"]["w"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a2 = jnp.exp(2 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xf)
+    return log_a, gated
+
+
+def _linear_scan(log_a, b):
+    """h_t = a_t h_{t-1} + b_t over axis 1 via associative scan."""
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+    la, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array          # (B, d_rnn) recurrent state, fp32
+    conv: jax.Array       # (B, W-1, d_rnn)
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int, dtype) -> RGLRUCache:
+    dr, W = _d_rnn(cfg), cfg.hybrid.conv_width
+    return RGLRUCache(jnp.zeros((batch, dr), jnp.float32),
+                      jnp.zeros((batch, W - 1, dr), dtype))
+
+
+def _conv_step(cache_conv, x_t, w, b):
+    seq = jnp.concatenate([cache_conv, x_t[:, None].astype(cache_conv.dtype)],
+                          axis=1)
+    out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(x_t.dtype), seq[:, 1:]
+
+
+def rglru_block(params: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence recurrent block. u: (B, S, d_model)."""
+    x = jnp.einsum("...d,de->...e", u, params["in_x"]["w"])
+    gate = jax.nn.gelu(jnp.einsum("...d,de->...e", u, params["in_gate"]["w"]))
+    W = params["conv"]["w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + x.shape[1]] * params["conv"]["w"][i] for i in range(W))
+    xc = xc + params["conv"]["b"]
+    xc = shard(xc, "batch", "seq", "mlp")
+    log_a, b = _gates(params, xc)
+    h = _linear_scan(log_a, b)                          # (B,S,dr) fp32
+    y = (h.astype(u.dtype) * gate)
+    return jnp.einsum("...e,ed->...d", y, params["out"]["w"])
+
+
+def rglru_decode(params: dict, u: jax.Array, cache: RGLRUCache,
+                 cfg: ModelConfig):
+    """One-token step. u: (B,1,d_model)."""
+    x = jnp.einsum("bd,de->be", u[:, 0], params["in_x"]["w"])
+    gate = jax.nn.gelu(jnp.einsum("bd,de->be", u[:, 0],
+                                  params["in_gate"]["w"]))
+    xc, new_conv = _conv_step(cache.conv, x, params["conv"]["w"],
+                              params["conv"]["b"])
+    log_a, b = _gates(params, xc)
+    h = jnp.exp(log_a) * cache.h + b
+    y = (h.astype(u.dtype) * gate)[:, None]
+    out = jnp.einsum("...e,ed->...d", y, params["out"]["w"])
+    return out, RGLRUCache(h, new_conv)

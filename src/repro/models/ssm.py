@@ -1,0 +1,200 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks + a linear recurrence over chunk states (matrix
+form of the scan).  Decode is the O(1) recurrent state update.
+
+Shapes follow the minimal SSD reference: x:(B,S,H,P), dt:(B,S,H), A:(H,),
+B/C:(B,S,G,N) with H/G heads per group.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return _d_inner(cfg) // cfg.ssm.head_dim
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    dt = L.dtype_of(cfg.param_dtype)
+    s = cfg.ssm
+    d, di = cfg.d_model, _d_inner(cfg)
+    H, G, N = _n_heads(cfg), s.n_groups, s.d_state
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        ks[3], (H,), jnp.float32,
+        np.log(1e-3), np.log(1e-1)))))          # softplus^-1 of U[1e-3,1e-1]
+    return {
+        "in_proj": {"w": L.dense_init(
+            ks[0], d, 2 * di + 2 * G * N + H, dtype=dt)},
+        "conv": {"w": (jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                         jnp.float32) * 0.1).astype(dt),
+                 "b": jnp.zeros((conv_ch,), dt)},
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_init,
+        "norm": L.rmsnorm_init(di, dt),
+        "out_proj": {"w": L.dense_init(ks[2], di, d, dtype=dt)},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x:(B,S,C), w:(W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[i,j] = sum_{j<k<=i} x[k], -inf above
+    the diagonal; exp(segsum) is the 1-semiseparable decay matrix."""
+    T = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., :, None], x.shape + (T,))    # xx[i,j]=x[i]
+    mask = np.tril(np.ones((T, T), bool), -1)
+    xx = jnp.where(mask, xx, 0.0)
+    seg = jnp.cumsum(xx, axis=-2)                             # sum_{j<r<=i} x[r]
+    return jnp.where(np.tril(np.ones((T, T), bool)), seg, -jnp.inf)
+
+
+def ssd_chunked(x, dA, Bm, Cm, chunk: int):
+    """Chunked SSD.  x:(B,S,H,P) (already dt-weighted), dA:(B,S,H) log-decay
+    per step, Bm/Cm:(B,S,G,N).  Returns y:(B,S,H,P), final_state:(B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    c = S // Q
+    R = H // G
+    xb = x.reshape(Bsz, c, Q, H, P)
+    Ab = dA.reshape(Bsz, c, Q, H).transpose(0, 3, 1, 2)        # (B,H,c,Q)
+    Bb = Bm.reshape(Bsz, c, Q, G, N)
+    Cb = Cm.reshape(Bsz, c, Q, G, N)
+    A_cs = jnp.cumsum(Ab, axis=-1)                             # (B,H,c,Q)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(Ab))                                # (B,H,c,Q,Q)
+    Lg = Lmat.reshape(Bsz, G, R, c, Q, Q)
+    xg = xb.reshape(Bsz, c, Q, G, R, P)
+    Y_diag = jnp.einsum("bclgn,bcsgn,bgrcls,bcsgrp->bclgrp",
+                        Cb.astype(jnp.float32), Bb.astype(jnp.float32),
+                        Lg, xg.astype(jnp.float32))
+
+    # chunk states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)              # (B,H,c,Q)
+    dsg = decay_states.reshape(Bsz, G, R, c, Q)
+    states = jnp.einsum("bclgn,bgrcl,bclgrp->bcgrpn",
+                        Bb.astype(jnp.float32), dsg, xg.astype(jnp.float32))
+
+    # inter-chunk recurrence (1-SS matmul over chunk index)
+    chunk_sum = A_cs[..., -1]                                  # (B,H,c)
+    pad = jnp.pad(chunk_sum, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))                        # (B,H,c+1,c+1)
+    states = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states], axis=1)       # (B,c+1,G,R,P,N)
+    dch = decay_chunk.reshape(Bsz, G, R, c + 1, c + 1)
+    new_states = jnp.einsum("bgrzc,bcgrpn->bzgrpn", dch, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # inter-chunk output
+    out_decay = jnp.exp(A_cs).reshape(Bsz, G, R, c, Q)
+    Y_off = jnp.einsum("bclgn,bcgrpn,bgrcl->bclgrp",
+                       Cb.astype(jnp.float32), prev_states, out_decay)
+    y = (Y_diag + Y_off).reshape(Bsz, c, Q, H, P).reshape(Bsz, S, H, P)
+    return y, final_state.reshape(Bsz, H, P, N)
+
+
+class MambaCache(NamedTuple):
+    ssm: jax.Array        # (B, H, P, N)
+    conv: jax.Array       # (B, W-1, conv_channels)
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    s = cfg.ssm
+    di = _d_inner(cfg)
+    H, G, N = _n_heads(cfg), s.n_groups, s.d_state
+    return MambaCache(
+        jnp.zeros((batch, H, s.head_dim, N), jnp.float32),
+        jnp.zeros((batch, s.conv_width - 1, di + 2 * G * N), dtype))
+
+
+def _split_proj(params, u, cfg: ModelConfig):
+    s = cfg.ssm
+    di = _d_inner(cfg)
+    H, G, N = _n_heads(cfg), s.n_groups, s.d_state
+    zxbcdt = jnp.einsum("...d,de->...e", u, params["in_proj"]["w"])
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * G * N]
+    dt_raw = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xBC, dt_raw
+
+
+def mamba_block(params: dict, u: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence mamba2 mixing. u: (B, S, d_model)."""
+    s = cfg.ssm
+    di = _d_inner(cfg)
+    H, G, N, P = _n_heads(cfg), s.n_groups, s.d_state, s.head_dim
+    Bsz, S, _ = u.shape
+    z, xBC, dt_raw = _split_proj(params, u, cfg)
+    xBC = _causal_conv(xBC, params["conv"]["w"], params["conv"]["b"])
+    x = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(Bsz, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                              # (H,)
+    x = shard(x, "batch", "seq", "mlp")
+    y, _ = ssd_chunked(x.astype(jnp.float32) * dt[..., None],
+                       dt * A, Bm, Cm, s.chunk)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(u.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("...e,ed->...d", y, params["out_proj"]["w"])
+
+
+def mamba_decode(params: dict, u: jax.Array, cache: MambaCache,
+                 cfg: ModelConfig):
+    """One-token recurrent step. u: (B,1,d_model)."""
+    s = cfg.ssm
+    di = _d_inner(cfg)
+    H, G, N, P = _n_heads(cfg), s.n_groups, s.d_state, s.head_dim
+    Bsz = u.shape[0]
+    z, xBC, dt_raw = _split_proj(params, u[:, 0], cfg)
+    # conv over (cached W-1 inputs ++ current)
+    seq = jnp.concatenate([cache.conv, xBC[:, None].astype(cache.conv.dtype)],
+                          axis=1)                              # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32),
+                          params["conv"]["w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + params["conv"]["b"].astype(jnp.float32))
+    new_conv = seq[:, 1:]
+    x = xBC[..., :di].reshape(Bsz, H, P)
+    Bm = xBC[..., di:di + G * N].reshape(Bsz, G, N)
+    Cm = xBC[..., di + G * N:].reshape(Bsz, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                       # (B,H)
+    R = H // G
+    Bx = jnp.einsum("bgn,bgrp->bgrpn", Bm,
+                    (x * dt[..., None]).reshape(Bsz, G, R, P))
+    h = dA[..., None, None] * cache.ssm + Bx.reshape(Bsz, H, P, N)
+    y = jnp.einsum("bgn,bgrpn->bgrp", Cm,
+                   h.reshape(Bsz, G, R, P, N)).reshape(Bsz, H, P)
+    y = y + params["D"][None, :, None] * x
+    y = y.reshape(Bsz, 1, di).astype(u.dtype)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z[:, None]), cfg.norm_eps)
+    out = jnp.einsum("...e,ed->...d", y, params["out_proj"]["w"])
+    return out, MambaCache(h, new_conv)

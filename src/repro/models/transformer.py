@@ -1,0 +1,320 @@
+"""Generic composable LM covering the assigned families.
+
+One ``init_params`` / ``forward`` / ``decode_step`` triple drives every
+architecture; the per-layer mixing is dispatched on cfg.family / attn_type /
+hybrid pattern.  Homogeneous layer stacks are scanned (stacked params) so
+the lowered HLO stays small and compile times tractable at 64 layers.
+
+Families:
+  dense / vlm      : [attn + mlp] x L        (vlm scatters patch embeddings)
+  moe              : [attn + moe] x L  (optional dense prefix, shared expert)
+  ssm              : [mamba2] x L
+  hybrid           : [(rec, rec, local-attn) + mlp each] groups (+ rec tail)
+  audio (enc-dec)  : whisper-style encoder + decoder with cross-attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as R
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------- init
+
+def _stack_init(init_one, key, n: int):
+    """vmap an init fn over layer keys -> stacked (n, ...) param leaves."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def _dense_block_init(key, cfg: ModelConfig, use_moe: bool):
+    ks = jax.random.split(key, 4)
+    dt = L.dtype_of(cfg.param_dtype)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+         "ln2": L.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.attn_type == "mla":
+        p["attn"] = A.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = A.gqa_init(ks[0], cfg)
+    if use_moe:
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt)
+    return p
+
+
+def _hybrid_group_init(key, cfg: ModelConfig):
+    dt = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+
+    def sub(k, kind):
+        kk = jax.random.split(k, 2)
+        p = {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+             "ln2": L.rmsnorm_init(cfg.d_model, dt),
+             "mlp": L.mlp_init(kk[1], cfg.d_model, cfg.d_ff, True, dt)}
+        p["mix"] = (R.rglru_init(kk[0], cfg) if kind == "rec"
+                    else A.gqa_init(kk[0], cfg))
+        return p
+
+    return {"rec1": sub(ks[0], "rec"), "rec2": sub(ks[1], "rec"),
+            "attn": sub(ks[2], "attn")}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = L.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+                 "ln_f": L.rmsnorm_init(cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.lm_head_init(ks[1], cfg.d_model, cfg.vocab, dt)
+
+    if cfg.family in ("dense", "vlm"):
+        p["blocks"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg, False), ks[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.moe.n_dense_layers
+        if nd:
+            p["dense_blocks"] = _stack_init(
+                lambda k: _dense_block_init(k, cfg, False), ks[3], nd)
+        p["blocks"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg, True), ks[2], cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        def one(k):
+            return {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+                    "mix": S.mamba_init(k, cfg)}
+        p["blocks"] = _stack_init(one, ks[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        period = len(cfg.hybrid.pattern)
+        n_groups, tail = divmod(cfg.n_layers, period)
+        p["groups"] = _stack_init(
+            lambda k: _hybrid_group_init(k, cfg), ks[2], n_groups)
+        if tail:
+            p["tail_blocks"] = _stack_init(
+                lambda k: _hybrid_group_init(k, cfg)["rec1"], ks[4], tail)
+    elif cfg.family == "audio":
+        p["enc_blocks"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg, False), ks[2], cfg.n_enc_layers)
+        p["enc_ln_f"] = L.rmsnorm_init(cfg.d_model, dt)
+
+        def dec_one(k):
+            kk = jax.random.split(k, 3)
+            pp = _dense_block_init(kk[0], cfg, False)
+            pp["ln_x"] = L.rmsnorm_init(cfg.d_model, dt)
+            pp["xattn"] = A.gqa_init(kk[1], cfg)
+            return pp
+        p["blocks"] = _stack_init(dec_one, ks[3], cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------- forward
+
+def _dense_block(bp, x, positions, cfg: ModelConfig, use_moe: bool,
+                 window: int):
+    h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        h = A.mla_attention(bp["attn"], h, positions, cfg)
+    else:
+        h = A.self_attention(bp["attn"], h, positions, cfg, True, window)
+    x = x + h
+    x = shard(x, "batch", "seq", "embed")
+    h = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+    if use_moe:
+        h, aux = MOE.moe_mlp(bp["moe"], h, cfg)
+    else:
+        h, aux = L.mlp(bp["mlp"], h, cfg.activation), jnp.float32(0)
+    return x + h, aux
+
+
+def _hybrid_sub(sp, x, positions, cfg, kind: str):
+    h = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+    if kind == "rec":
+        h = R.rglru_block(sp["mix"], h, cfg)
+    else:
+        h = A.self_attention(sp["mix"], h, positions, cfg, True,
+                             cfg.hybrid.local_window)
+    x = x + h
+    h = L.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(sp["mlp"], h, cfg.activation)
+
+
+_REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_saveable,
+    "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _scan_blocks(stacked, fn, x, remat, unroll: bool = False):
+    body = fn
+    if remat:
+        policy = _REMAT_POLICIES[remat if isinstance(remat, str)
+                                 else "nothing"]
+        body = jax.checkpoint(fn, policy=policy)
+
+    if unroll:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        aux = jnp.float32(0)
+        for i in range(n):
+            bp = jax.tree.map(lambda l: l[i], stacked)
+            x, a = body(bp, x)
+            aux = aux + a
+        return x, aux
+
+    def step(carry, bp):
+        x, aux = carry
+        x, a = body(bp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0)), stacked)
+    return x, aux
+
+
+def forward_features(params: Params, batch: Dict[str, jax.Array],
+                     cfg: ModelConfig, remat: bool = False,
+                     window_override: Optional[int] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Backbone only: returns (normalized features (B,S,d), aux_loss) —
+    the head is applied by ``forward`` or by the chunked-CE loss."""
+    tokens = batch["tokens"]
+    Bsz, Ssz = tokens.shape
+    positions = jnp.arange(Ssz)
+    window = cfg.window if window_override is None else window_override
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "audio":
+        # whisper uses absolute (sinusoidal here) decoder positions, no rope
+        x = x + jnp.asarray(L.sinusoidal_positions(Ssz, cfg.d_model)
+                            )[None].astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        bi = jnp.arange(Bsz)[:, None]
+        x = x.at[bi, batch["img_pos"]].set(
+            batch["img_embeds"].astype(x.dtype))
+
+    aux = jnp.float32(0)
+    if cfg.family in ("dense", "vlm"):
+        x, aux = _scan_blocks(
+            params["blocks"],
+            lambda bp, h: _dense_block(bp, h, positions, cfg, False, window),
+            x, remat, cfg.unroll_scan)
+    elif cfg.family == "moe":
+        if "dense_blocks" in params:
+            x, a0 = _scan_blocks(
+                params["dense_blocks"],
+                lambda bp, h: _dense_block(bp, h, positions, cfg, False,
+                                           window), x, remat, cfg.unroll_scan)
+            aux += a0
+        x, a1 = _scan_blocks(
+            params["blocks"],
+            lambda bp, h: _dense_block(bp, h, positions, cfg, True, window),
+            x, remat, cfg.unroll_scan)
+        aux += a1
+    elif cfg.family == "ssm":
+        def ssm_block(bp, h):
+            return h + S.mamba_block(
+                bp["mix"], L.rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg), \
+                jnp.float32(0)
+        x, _ = _scan_blocks(params["blocks"], ssm_block, x, remat, cfg.unroll_scan)
+    elif cfg.family == "hybrid":
+        def group(bp, h):
+            for kind, name in zip(cfg.hybrid.pattern,
+                                  ("rec1", "rec2", "attn")):
+                h = _hybrid_sub(bp[name], h, positions, cfg, kind)
+            return h, jnp.float32(0)
+        x, _ = _scan_blocks(params["groups"], group, x, remat, cfg.unroll_scan)
+        if "tail_blocks" in params:
+            x, _ = _scan_blocks(
+                params["tail_blocks"],
+                lambda bp, h: (_hybrid_sub(bp, h, positions, cfg, "rec"),
+                               jnp.float32(0)), x, remat, cfg.unroll_scan)
+    elif cfg.family == "audio":
+        enc = encode(params, batch["frames"], cfg, remat)
+        x, aux = _decoder_forward(params, x, enc, positions, cfg, remat)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.grad_dtype_barrier(x)          # keep backward in compute dtype
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def head_weight(params: Params, cfg: ModelConfig) -> jax.Array:
+    """(d, V) head matrix (transposed embedding when tied)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            remat: bool = False, window_override: Optional[int] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  batch: tokens (B,S) [+ img_embeds/img_pos |
+    frames].  Returns (logits (B,S,V) fp32, aux_loss)."""
+    x, aux = forward_features(params, batch, cfg, remat, window_override)
+    logits = (L.unembed(params["embed"], x, cfg.logit_softcap)
+              if cfg.tie_embeddings
+              else L.lm_head(params["lm_head"], x, cfg.logit_softcap))
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ------------------------------------------------------ audio (whisper)
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig,
+           remat: bool = False) -> jax.Array:
+    """frames: (B, n_frames, d_model) stubbed conv-frontend output."""
+    frames = frames.astype(L.dtype_of(cfg.param_dtype))
+    pos_tbl = jnp.asarray(
+        L.sinusoidal_positions(frames.shape[1], cfg.d_model))
+    x = frames + pos_tbl[None].astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def enc_block(bp, h):
+        hh = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+        hh = A.self_attention(bp["attn"], hh, positions, cfg, causal=False)
+        h = h + hh
+        hh = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+        return h + L.mlp(bp["mlp"], hh, cfg.activation), jnp.float32(0)
+
+    x, _ = _scan_blocks(params["enc_blocks"], enc_block, x, remat, cfg.unroll_scan)
+    return L.rmsnorm(params["enc_ln_f"], x, cfg.norm_eps)
+
+
+def _decoder_forward(params, x, enc, positions, cfg, remat):
+    enc_pos = jnp.arange(enc.shape[1])
+
+    def dec_block(bp, h):
+        hh = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+        hh = A.self_attention(bp["attn"], hh, positions, cfg, causal=True)
+        h = h + hh
+        hh = L.rmsnorm(bp["ln_x"], h, cfg.norm_eps)
+        h = h + _cross_attention(bp["xattn"], hh, enc, enc_pos, cfg)
+        hh = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+        return h + L.mlp(bp["mlp"], hh, cfg.activation), jnp.float32(0)
+
+    return _scan_blocks(params["blocks"], dec_block, x, remat, cfg.unroll_scan)
+
+
+def _cross_attention(p, x, enc, enc_pos, cfg):
+    q = jnp.einsum("...d,dhk->...hk", x, p["wq"]["w"])
+    k = jnp.einsum("...d,dgk->...gk", enc, p["wk"]["w"])
+    v = jnp.einsum("...d,dgk->...gk", enc, p["wv"]["w"])
+    bias = jnp.zeros((1, 1, x.shape[-2], enc.shape[-2]), jnp.float32)
+    o = A._direct_attn(q, k, v, bias)
+    return jnp.einsum("...hk,hkd->...d", o, p["wo"]["w"])

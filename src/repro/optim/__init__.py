@@ -1,0 +1,6 @@
+"""Optimizer substrate: schedules + composable transforms over core.frodo."""
+from repro.optim.schedules import (constant, linear_warmup, cosine_decay,
+                                   warmup_cosine)
+from repro.optim.transforms import (scale_by_schedule,
+                                    add_decoupled_weight_decay, chain,
+                                    default_decay_mask)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (scalar step -> multiplier, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant(value: float = 1.0):
+    return lambda step: jnp.float32(value)
+
+
+def linear_warmup(warmup_steps: int, base: float = 1.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return base * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_decay(decay_steps: int, base: float = 1.0, floor: float = 0.0):
+    def fn(step):
+        s = jnp.clip(jnp.asarray(step, jnp.float32), 0, decay_steps)
+        cos = 0.5 * (1.0 + jnp.cos(np.pi * s / max(decay_steps, 1)))
+        return floor + (base - floor) * cos
+    return fn
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, base: float = 1.0,
+                  floor: float = 0.0):
+    """The production default: linear warmup then cosine to ``floor``."""
+    warm = linear_warmup(warmup_steps, base)
+    decay = cosine_decay(max(total_steps - warmup_steps, 1), base, floor)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < warmup_steps, warm(step),
+                         decay(s - warmup_steps))
+    return fn

@@ -1,0 +1,75 @@
+"""Composable optimizer transforms over the core Optimizer API.
+
+These wrap a base ``core.frodo.Optimizer`` (FrODO or any baseline) the way
+optax chains do — scaling by a schedule, decoupled weight decay — without
+touching the fractional-memory semantics (the memory buffer always sees the
+RAW gradients, as in Algorithm 1; schedule and decay act on the emitted
+update).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frodo import Optimizer
+
+
+def scale_by_schedule(base: Optimizer, schedule: Callable) -> Optimizer:
+    """delta <- schedule(step) * delta."""
+
+    def init(params):
+        return {"inner": base.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        delta, inner = base.update(grads, state["inner"], params)
+        m = schedule(state["step"])
+        delta = jax.tree.map(lambda d: (d * m).astype(d.dtype), delta)
+        return delta, {"inner": inner, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def add_decoupled_weight_decay(base: Optimizer, wd: float,
+                               mask: Callable = None) -> Optimizer:
+    """AdamW-style decay: delta <- delta - wd * params (after the inner
+    update, so the fractional memory never sees the decay).  ``mask(path)``
+    may exclude leaves (norm scales, biases) — it receives the jax keypath
+    string."""
+
+    def init(params):
+        return base.init(params)
+
+    def update(grads, state, params=None):
+        assert params is not None, "weight decay needs params"
+        delta, state = base.update(grads, state, params)
+        paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+        flat_delta = treedef.flatten_up_to(delta)
+        out = []
+        for (path, p), d in zip(paths, flat_delta):
+            key = jax.tree_util.keystr(path)
+            if mask is not None and not mask(key):
+                out.append(d)
+            else:
+                out.append((d - wd * p.astype(d.dtype)).astype(d.dtype))
+        return treedef.unflatten(out), state
+
+    return Optimizer(init, update)
+
+
+def default_decay_mask(path: str) -> bool:
+    """Decay matmul weights only (skip norms/scales/biases/1-d leaves)."""
+    return not any(t in path for t in ("scale", "bias", "ln", "norm",
+                                       "lambda", "dt_bias", "A_log", "D"))
+
+
+def chain(base: Optimizer, *, schedule: Callable = None,
+          weight_decay: float = 0.0) -> Optimizer:
+    opt = base
+    if weight_decay > 0.0:
+        opt = add_decoupled_weight_decay(opt, weight_decay,
+                                         default_decay_mask)
+    if schedule is not None:
+        opt = scale_by_schedule(opt, schedule)
+    return opt

@@ -1,0 +1,80 @@
+"""Serving engine: chunked prefill + batched greedy/sampled decode.
+
+``serve_step`` (one token, whole batch) is the unit the decode dry-run
+shapes lower; ``Engine`` is the runnable host-side loop used by the
+examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as D
+from repro.models import transformer as T
+
+
+def make_serve_step(cfg: ModelConfig, window_override: Optional[int] = None):
+    """serve_step(params, cache, tokens (B,1), pos) -> (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = D.decode_step(params, cache, tokens, pos, cfg,
+                                      window_override)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """Full-sequence prefill producing last-token logits (the dry-run unit
+    for prefill shapes).  Cache population for mixed prefill+decode serving
+    is done token-by-token by the Engine below (host loop) — adequate for
+    CPU tests; a production prefill would write the cache in one pass."""
+
+    def prefill(params, batch):
+        logits, _ = T.forward(params, batch, cfg, remat=False)
+        return logits[:, -1]
+
+    return prefill
+
+
+@dataclasses.dataclass
+class Engine:
+    """Minimal batched serving loop (greedy)."""
+    cfg: ModelConfig
+    params: Any
+    max_len: int = 256
+    window_override: Optional[int] = None
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.cfg, self.window_override))
+        self._cache0 = D.init_cache(self.cfg, 0, 0)  # placeholder, unused
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 frames: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, P) int32 (right-aligned, no padding support needed
+        for the examples).  Returns (B, n_new)."""
+        B, P = prompts.shape
+        cache = D.init_cache(self.cfg, B, self.max_len, self.window_override)
+        if self.cfg.family == "audio":
+            assert frames is not None
+            cache = D.encode_for_decode(self.params, cache,
+                                        jnp.asarray(frames), self.cfg)
+        tok = None
+        for t in range(P):
+            tok, cache = self._step(self.params, cache,
+                                    jnp.asarray(prompts[:, t:t + 1]),
+                                    jnp.int32(t))
+        out = []
+        pos = P
+        for _ in range(n_new):
+            out.append(np.asarray(tok[:, 0]))
+            tok, cache = self._step(self.params, cache, tok, jnp.int32(pos))
+            pos += 1
+        return np.stack(out, axis=1)

@@ -1,0 +1,51 @@
+"""Flat-file checkpointing (npz) for param/optimizer pytrees.
+
+Host-gathers leaves (fine for the CPU examples; on a real fleet this would
+be an async, per-shard writer — the format is deliberately a plain dict of
+jax-keypath->array so that upgrade is mechanical).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+def _np_safe(a: np.ndarray) -> np.ndarray:
+    if a.dtype == ml_dtypes.bfloat16:
+        return a.astype(np.float32)
+    return a
+
+
+def _keys(tree: Any) -> list[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def save(path: str, tree: Any, metadata: Optional[dict] = None) -> None:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrs = {jax.tree_util.keystr(p): _np_safe(np.asarray(jax.device_get(v)))
+            for p, v in paths}
+    np.savez(path, **arrs)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    fname = path if path.endswith(".npz") else path + ".npz"
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    with np.load(fname) as z:
+        leaves = []
+        for p, ref in paths:
+            k = jax.tree_util.keystr(p)
+            arr = z[k]
+            assert tuple(arr.shape) == tuple(ref.shape), (k, arr.shape,
+                                                          ref.shape)
+            leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

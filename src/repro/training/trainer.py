@@ -1,0 +1,63 @@
+"""Trainer loop: wires data pipeline, train step, metrics, checkpoints."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.training import checkpoint as ckpt
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, make_train_step)
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: ModelConfig
+    tc: TrainConfig
+    n_agents: int
+    n_pods: int = 1
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = "checkpoints"
+    metrics_file: Optional[str] = None
+
+    def __post_init__(self):
+        self.step_fn = jax.jit(
+            make_train_step(self.cfg, self.tc, self.n_agents, self.n_pods))
+        self._history: list[Dict[str, float]] = []
+
+    def init(self, seed: int = 0) -> TrainState:
+        return init_train_state(jax.random.key(seed), self.cfg, self.tc,
+                                self.n_agents)
+
+    def run(self, state: TrainState, data: Iterator[Dict[str, np.ndarray]],
+            steps: int) -> TrainState:
+        t0 = time.time()
+        for i in range(steps):
+            batch = next(data)
+            state, metrics = self.step_fn(state, batch)
+            if i % self.log_every == 0 or i == steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()
+                     if np.asarray(v).ndim == 0}
+                m.update(step=i, wall=round(time.time() - t0, 2))
+                self._history.append(m)
+                print(json.dumps(m), flush=True)
+            if self.ckpt_every and (i + 1) % self.ckpt_every == 0:
+                ckpt.save(os.path.join(self.ckpt_dir, f"step{i+1}.npz"),
+                          state.params, {"step": i + 1})
+        if self.metrics_file:
+            os.makedirs(os.path.dirname(self.metrics_file) or ".",
+                        exist_ok=True)
+            with open(self.metrics_file, "w") as f:
+                json.dump(self._history, f, indent=1)
+        return state
+
+    @property
+    def history(self):
+        return self._history

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; the dry-run (and only it) forces
+# 512 placeholder devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

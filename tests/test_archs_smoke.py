@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+variants (<=2-5 layers, d_model<=512, <=4 experts) run one forward and one
+FrODO train step on CPU; output shapes + finiteness asserted.  The full
+configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as REG
+from repro.configs.base import INPUT_SHAPES
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.training.train_step import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+ARCHS = list(REG.ARCH_IDS)
+
+
+def _batch(cfg, n_agents, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": rng.integers(0, cfg.vocab, (n_agents, B, S)).astype(
+            np.int32),
+         "labels": rng.integers(0, cfg.vocab, (n_agents, B, S)).astype(
+            np.int32)}
+    if cfg.family == "vlm":
+        b["img_embeds"] = rng.normal(size=(n_agents, B, cfg.n_img_tokens,
+                                           cfg.d_model)).astype(np.float32)
+        b["img_pos"] = np.tile(np.arange(cfg.n_img_tokens, dtype=np.int32),
+                               (n_agents, B, 1))
+    if cfg.family == "audio":
+        b["frames"] = rng.normal(size=(n_agents, B, cfg.n_frames,
+                                       cfg.d_model)).astype(np.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_config_limits(arch):
+    cfg = REG.get_smoke_config(arch)
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 5
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.family == REG.get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = REG.get_smoke_config(arch)
+    params = T.init_params(jax.random.key(0), cfg)
+    B, S = 2, 64
+    batch = {k: v[0] for k, v in _batch(cfg, 1, B, S).items()}
+    logits, aux = T.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_frodo_train_step(arch):
+    cfg = REG.get_smoke_config(arch)
+    n_agents = 2
+    tc = TrainConfig(T=6, memory_mode="exact", remat=False, alpha=0.01,
+                     beta=0.004)
+    state = init_train_state(jax.random.key(0), cfg, tc, n_agents)
+    step = jax.jit(make_train_step(cfg, tc, n_agents))
+    batch = _batch(cfg, n_agents, 2, 64)
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()
+              ) > 0
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state2.params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = REG.get_smoke_config(arch)
+    params = T.init_params(jax.random.key(1), cfg)
+    B = 2
+    cache = D.init_cache(cfg, B, 32)
+    if cfg.family == "audio":
+        frames = jnp.asarray(np.random.default_rng(0).normal(
+            size=(B, cfg.n_frames, cfg.d_model)), jnp.bfloat16)
+        cache = D.encode_for_decode(params, cache, frames, cfg)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = D.decode_step(params, cache, tok, jnp.int32(0), cfg)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_consensus_equalizes_agents():
+    """After one step with complete uniform W, all agents share params."""
+    cfg = REG.get_smoke_config("h2o-danube-1.8b")
+    tc = TrainConfig(T=4, memory_mode="exact", remat=False,
+                     weights="xiao_boyd", topology="complete")
+    state = init_train_state(jax.random.key(0), cfg, tc, 4)
+    step = jax.jit(make_train_step(cfg, tc, 4))
+    state2, _ = step(state, _batch(cfg, 4, 2, 32))
+    for leaf in jax.tree.leaves(state2.params):
+        arr = np.asarray(leaf, np.float32)
+        np.testing.assert_allclose(arr, np.broadcast_to(arr[:1], arr.shape),
+                                   atol=2e-2)
+
+
+def test_microbatching_matches_full_batch():
+    """mb=2 gradient accumulation == single big batch (same data)."""
+    cfg = REG.get_smoke_config("h2o-danube-1.8b").replace(
+        param_dtype="float32", compute_dtype="float32")
+    batch = _batch(cfg, 1, 4, 32)
+    tc1 = TrainConfig(T=4, memory_mode="exact", remat=False, grad_clip=0)
+    tc2 = TrainConfig(T=4, memory_mode="exact", remat=False, grad_clip=0,
+                      microbatches=2)
+    s1 = init_train_state(jax.random.key(0), cfg, tc1, 1)
+    s2 = init_train_state(jax.random.key(0), cfg, tc2, 1)
+    o1, _ = jax.jit(make_train_step(cfg, tc1, 1))(s1, batch)
+    o2, _ = jax.jit(make_train_step(cfg, tc2, 1))(s2, batch)
+    for a, b in zip(jax.tree.leaves(o1.params), jax.tree.leaves(o2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_shape_skip_table():
+    """Exactly one (arch x shape) pair is skipped: whisper x long_500k."""
+    skips = []
+    for arch in ARCHS:
+        cfg = REG.get_config(arch)
+        for name, shape in INPUT_SHAPES.items():
+            ok, reason = REG.shape_supported(cfg, shape)
+            if not ok:
+                skips.append((arch, name))
+    assert skips == [("whisper-tiny", "long_500k")]
+
+
+def test_decode_window_overrides():
+    """Dense full-attention archs get the SWA serving override at 500k;
+    SSM/hybrid/native-SWA don't."""
+    long_shape = INPUT_SHAPES["long_500k"]
+    assert REG.decode_window(REG.get_config("qwen3-32b"), long_shape) == 8192
+    assert REG.decode_window(REG.get_config("mamba2-780m"), long_shape) is None
+    assert REG.decode_window(REG.get_config("h2o-danube-1.8b"),
+                             long_shape) is None
+    assert REG.decode_window(REG.get_config("qwen3-32b"),
+                             INPUT_SHAPES["decode_32k"]) is None

@@ -1,0 +1,103 @@
+"""Attention: blockwise == direct, window masking, decode ring buffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+
+
+def _qkv(B=2, S=256, H=4, G=2, hd=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, G, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, G, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_blockwise_matches_direct(window, chunk):
+    q, k, v = _qkv()
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    bias = A._mask_bias(pos, pos, True, window)[None, None]
+    ref = A._direct_attn(q, k, v, bias)
+    out = A._blockwise_attn(q, k, v, pos, pos, True, window, chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_blockwise_noncausal():
+    q, k, v = _qkv(S=128)
+    pos = jnp.arange(128)
+    bias = jnp.zeros((1, 1, 128, 128), jnp.float32)
+    ref = A._direct_attn(q, k, v, bias)
+    out = A._blockwise_attn(q, k, v, pos, pos, False, 0, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_window_mask_excludes_far_tokens():
+    pos = jnp.arange(8)
+    bias = A._mask_bias(pos, pos, True, 3)
+    b = np.asarray(bias)
+    assert b[5, 5] == 0 and b[5, 3] == 0          # within window
+    assert b[5, 2] < -1e29 and b[5, 6] < -1e29    # outside / future
+
+
+def _decode_cfg(window=0):
+    return ModelConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+                       d_ff=64, vocab=64, window=window,
+                       param_dtype="float32", compute_dtype="float32")
+
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_decode_matches_full_attention(window):
+    """Token-by-token decode_attention == full self_attention row."""
+    cfg = _decode_cfg(window)
+    params = A.gqa_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    S = 24
+    x = jnp.asarray(rng.normal(size=(2, S, 32)), jnp.float32)
+    full = A.self_attention(params, x, jnp.arange(S), cfg, True, window)
+    cache = A.init_cache(cfg, 2, S, window, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.decode_attention(params, x[:, t:t + 1], cache,
+                                      jnp.int32(t), cfg, window)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ring_buffer_cache_is_window_sized():
+    cfg = _decode_cfg(window=8)
+    cache = A.init_cache(cfg, 2, 1024, 8, jnp.float32)
+    assert cache.k.shape[1] == 8
+
+
+def test_mla_decode_matches_full():
+    from repro.configs.base import MLAConfig
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=4,
+                      d_ff=64, vocab=64, attn_type="mla",
+                      mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8,
+                                    qk_nope_dim=8, qk_rope_dim=4,
+                                    v_head_dim=8),
+                      param_dtype="float32", compute_dtype="float32")
+    params = A.mla_init(jax.random.key(0), cfg)
+    rng = np.random.default_rng(2)
+    S = 16
+    x = jnp.asarray(rng.normal(size=(2, S, 32)), jnp.float32)
+    full = A.mla_attention(params, x, jnp.arange(S), cfg)
+    cache = A.mla_init_cache(cfg, 2, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = A.mla_decode(params, x[:, t:t + 1], cache, jnp.int32(t),
+                                cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3,
+                               atol=2e-3)

@@ -1,0 +1,103 @@
+"""Dry-run machinery on a small forced-device mesh (subprocess so the
+XLA device-count flag doesn't leak into other tests), plus analytic-flops
+sanity checks that run in-process."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import registry as REG
+from repro.configs.base import INPUT_SHAPES
+from repro.utils import flops as FL
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_on_forced_host_devices(tmp_path):
+    """Smoke config, 2x2 mesh, 4 forced host devices: the whole lower +
+    compile + analysis path runs outside the production container."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import json, sys
+        import jax
+        from jax.sharding import AxisType
+        from repro.configs import registry as REG
+        from repro.configs.base import INPUT_SHAPES, InputShape
+        from repro.launch import dryrun as DR
+        from repro.training import train_step as TS
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+        cfg = REG.get_smoke_config("h2o-danube-1.8b")
+        shape = InputShape("tiny_train", 128, 8, "train")
+        lowered, meta = DR.lower_train(cfg, shape, mesh, False,
+                                       TS.TrainConfig(T=4,
+                                                      memory_mode="exact",
+                                                      microbatches=2))
+        an = DR._analyze(lowered)
+        out = {"agents": meta["n_agents"],
+               "flops": an["cost"]["flops"],
+               "coll": an["collectives"]["counts"]}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["agents"] == 2           # data axis = agent axis for danube
+    assert out["flops"] > 0
+    assert sum(out["coll"].values()) > 0  # consensus/TP emitted collectives
+
+
+def test_analytic_flops_model_vs_exec():
+    cfg = REG.get_config("qwen3-32b")
+    t = FL.train_flops(cfg, INPUT_SHAPES["train_4k"], remat=True)
+    # 6ND within sane bounds of exec flops (remat factor 4 + attention)
+    assert 0.5 < t["model_flops"] / t["exec_flops"] < 0.8
+    assert t["active"] > 30e9           # ~32B params
+    # MoE: active much smaller than total
+    moe = FL.param_counts(REG.get_config("qwen3-moe-30b-a3b"))
+    assert moe["active"] < 0.2 * moe["total"]
+
+
+def test_decode_flops_scale_with_cache():
+    cfg = REG.get_config("qwen3-32b")
+    d32 = FL.decode_flops(cfg, INPUT_SHAPES["decode_32k"])
+    # attention term ~ B*H*S: halve the window -> attention drops
+    dwin = FL.decode_flops(cfg, INPUT_SHAPES["decode_32k"], window=8192)
+    assert dwin["attn_flops"] < 0.5 * d32["attn_flops"]
+
+
+def test_ssm_decode_flops_constant_in_seq():
+    cfg = REG.get_config("mamba2-780m")
+    a = FL.decode_flops(cfg, INPUT_SHAPES["decode_32k"])
+    from repro.configs.base import InputShape
+    b = FL.decode_flops(cfg, InputShape("x", 524288, 128, "decode"))
+    assert a["attn_flops"] == b["attn_flops"]   # O(1) state update
+
+
+def test_collective_parse_on_synthetic_hlo():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+      %ag = bf16[8,128] all-gather(%x), replica_groups={}
+      %ar.1 = f32[1024] all-reduce(%y), to_apply=%sum
+      %rs = f32[2,4] reduce-scatter(%z), dimensions={0}
+      %cp = bf16[16] collective-permute(%w), source_target_pairs={{0,1}}
+    """
+    out = parse_collectives(hlo)
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+    assert out["bytes_by_kind"]["all-gather"] == 8 * 128 * 2
+    assert out["bytes_by_kind"]["all-reduce"] == 1024 * 4
+    # all-reduce weighted 2x in the effective ring model
+    assert out["effective_bytes_per_device"] == (
+        8 * 128 * 2 + 2 * 1024 * 4 + 8 * 4 + 16 * 2)

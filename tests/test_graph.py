@@ -1,0 +1,65 @@
+"""Communication graph / mixing matrix tests."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+
+
+@pytest.mark.parametrize("topo,args", [
+    (G.complete, (6,)), (G.ring, (6, True)), (G.ring, (6, False)),
+    (G.torus2d, (3, 4)), (G.hypercube, (3,)), (G.star, (5,)),
+    (G.random_strongly_connected, (9, 0.2, 3)),
+])
+def test_strong_connectivity(topo, args):
+    assert G.is_strongly_connected(topo(*args))
+
+
+def test_disconnected_detected():
+    A = np.zeros((4, 4))
+    A[0, 1] = A[1, 0] = 1
+    A[2, 3] = A[3, 2] = 1
+    assert not G.is_strongly_connected(A)
+
+
+@pytest.mark.parametrize("weights", [G.uniform_weights, G.metropolis_weights,
+                                     G.xiao_boyd_weights])
+def test_row_stochastic(weights):
+    A = G.torus2d(3, 3)
+    W = weights(A)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_xiao_boyd_complete_is_averaging():
+    """On the complete graph the optimal weights are exactly 11^T/n —
+    the 'optimal communication weights as defined in [10]' of the paper."""
+    W = G.xiao_boyd_weights(G.complete(5))
+    np.testing.assert_allclose(W, np.full((5, 5), 0.2), atol=1e-12)
+    assert G.sigma(W) < 1e-10
+
+
+def test_xiao_boyd_beats_uniform_on_ring():
+    A = G.ring(8, directed=False)
+    assert G.sigma(G.xiao_boyd_weights(A)) <= G.sigma(
+        G.uniform_weights(A)) + 1e-12
+
+
+def test_sigma_contracts_disagreement():
+    A = G.ring(6, directed=False)
+    W = G.metropolis_weights(A)
+    s = G.sigma(W)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 3))
+    for _ in range(5):
+        dis_before = np.linalg.norm(x - x.mean(0))
+        x = W @ x
+        dis_after = np.linalg.norm(x - x.mean(0))
+        assert dis_after <= s * dis_before + 1e-9
+
+
+def test_hierarchical_kron():
+    Wp = G.xiao_boyd_weights(G.complete(2))
+    Wi = G.xiao_boyd_weights(G.complete(3))
+    W = G.hierarchical_weights(Wp, Wi)
+    assert W.shape == (6, 6)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    assert G.is_strongly_connected(W)

@@ -1,0 +1,119 @@
+"""Fractional-memory unit + property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import memory as fmem
+
+
+def test_mu_weights_basic():
+    w = fmem.mu_weights(100, 0.15)
+    assert w.shape == (100,)
+    assert w[0] == 1.0                         # normalized by max (n=1)
+    assert np.all(np.diff(w) < 0)              # strictly decaying
+    assert np.all(w > 0)
+
+
+@hypothesis.given(lam=st.floats(0.01, 0.99), T=st.integers(1, 300))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_mu_weights_power_law(lam, T):
+    w = fmem.mu_weights(T, lam)
+    n = np.arange(1, T + 1)
+    np.testing.assert_allclose(w, n ** (lam - 1.0), rtol=1e-12)
+
+
+def test_mu_weights_validation():
+    with pytest.raises(ValueError):
+        fmem.mu_weights(0, 0.5)
+    with pytest.raises(ValueError):
+        fmem.mu_weights(10, 1.5)
+
+
+@pytest.mark.parametrize("lam", [0.1, 0.15, 0.2, 0.5, 0.9])
+@pytest.mark.parametrize("T", [50, 90, 100])
+def test_expsum_fit_quality(lam, T):
+    # K=8 exponentials, decay scales capped at T (see fit_expsum docstring):
+    # <1% rel L2 across the paper's lambda range
+    assert fmem.expsum_error(T, lam, K=8) < 1e-2
+
+
+def test_expsum_rates_capped_at_window():
+    """Decay scales must not exceed the truncation window T (see
+    fit_expsum docstring / EXPERIMENTS.md ablations: slower exponentials
+    keep pushing the iterate long after the paper's kernel truncates)."""
+    for T in (50, 90):
+        rates, _ = fmem.fit_expsum(T, 0.15, 8)
+        taus = -1.0 / np.log(rates)
+        assert taus.max() <= T * 1.001
+
+
+def test_expsum_fit_monotone_in_K():
+    errs = [fmem.expsum_error(90, 0.15, K) for K in (2, 4, 8, 12)]
+    assert errs[0] > errs[-1]
+    assert errs[-1] < 1e-3
+
+
+def test_exact_memory_term_matches_direct_sum():
+    """Circular-buffer bookkeeping: M = sum mu(n) g^(k-n) exactly."""
+    rng = np.random.default_rng(0)
+    T, n = 7, 5
+    lam = 0.2
+    w = jnp.asarray(fmem.mu_weights(T, lam), jnp.float32)
+    hist = jnp.zeros((T, n), jnp.float32)
+    gs = []
+    for k in range(13):
+        cursor = jnp.int32(k % T)
+        M = fmem.exact_memory_term(hist, cursor, w)
+        expect = np.zeros(n)
+        for i in range(1, T + 1):               # n-th previous gradient
+            if k - i >= 0:
+                expect += fmem.mu_weights(T, lam)[i - 1] * gs[k - i]
+        np.testing.assert_allclose(np.asarray(M), expect, rtol=2e-5,
+                                   atol=1e-6)
+        g = rng.normal(size=n).astype(np.float32)
+        gs.append(g)
+        hist = fmem.exact_push(hist, cursor, jnp.asarray(g))
+
+
+def test_expsum_recurrence_matches_kernel_sum():
+    """S_k EMA recurrence reproduces sum_n c r^n g^(t-n)."""
+    rng = np.random.default_rng(1)
+    rates = jnp.asarray([0.9, 0.5], jnp.float32)
+    n = 4
+    acc = jnp.zeros((2, n), jnp.float32)
+    gs = []
+    for t in range(10):
+        direct = np.zeros((2, n))
+        for i, r in enumerate(np.asarray(rates)):
+            for nn in range(1, t + 1):
+                direct[i] += r ** nn * gs[t - nn]
+        np.testing.assert_allclose(np.asarray(acc), direct, rtol=1e-5,
+                                   atol=1e-6)
+        g = rng.normal(size=n).astype(np.float32)
+        gs.append(g)
+        acc = fmem.expsum_push(acc, rates, jnp.asarray(g))
+
+
+@hypothesis.given(st.integers(2, 60), st.floats(0.05, 0.95))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_expsum_vs_exact_memory_term(T, lam):
+    """On a fixed gradient stream the two representations agree to ~fit
+    error after T steps (exact truncates, expsum has a small tail)."""
+    rng = np.random.default_rng(2)
+    K = 10
+    rates, coeffs = fmem.fit_expsum(T, lam, K)
+    w = jnp.asarray(fmem.mu_weights(T, lam), jnp.float32)
+    hist = jnp.zeros((T, 3), jnp.float32)
+    acc = jnp.zeros((K, 3), jnp.float32)
+    for t in range(T):
+        g = jnp.asarray(rng.normal(size=3), jnp.float32)
+        hist = fmem.exact_push(hist, jnp.int32(t % T), g)
+        acc = fmem.expsum_push(acc, jnp.asarray(rates, jnp.float32), g)
+    M_exact = fmem.exact_memory_term(hist, jnp.int32(T % T), w)
+    M_exp = fmem.expsum_memory_term(acc, jnp.asarray(coeffs, jnp.float32))
+    denom = float(jnp.linalg.norm(M_exact)) + 1e-6
+    rel = float(jnp.linalg.norm(M_exp - M_exact)) / denom
+    assert rel < 0.15, rel

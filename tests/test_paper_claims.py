@@ -1,0 +1,37 @@
+"""End-to-end guards on the paper's headline claims (reduced protocol;
+the full-protocol numbers live in EXPERIMENTS.md)."""
+import sys
+import os
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.mark.slow
+def test_exp1_ordering_and_speedup():
+    from benchmarks.exp1_quadratic import run_experiment
+    s = run_experiment(n_sets=8, n_circle=8, seed=3, out=None)
+    frac = s["fractional"]["circle_mean"]
+    hb = s["heavy_ball"]["circle_mean"]
+    nm = s["no_memory"]["circle_mean"]
+    # headline: fractional fastest, >=2x vs both baselines on average
+    assert frac < hb < nm
+    assert nm / frac > 2.0
+    # stability: fractional is the most direction-consistent variant
+    r = s["steep_flat_ratio"]
+    assert r["fractional"] < r["heavy_ball"] < r["no_memory"]
+    # significance
+    assert s["ks_tests"]["one_sided_fractional<no_memory"]["p"] < 1e-3
+
+
+@pytest.mark.slow
+def test_exp2_frodo_beats_gd_and_heavy_ball():
+    from benchmarks.exp2_federated import run_experiment
+    s = run_experiment(steps=120, n_seeds=1, out=None)
+    assert s["speedup_vs_gd"] > 2.0           # paper claims 2-3x
+    assert s["speedup_vs_heavy_ball"] > 1.5
+    # comparable final quality to Adam
+    assert abs(s["frodo"]["final_acc_mean"]
+               - s["adam"]["final_acc_mean"]) < 0.05

@@ -1,0 +1,132 @@
+"""Theorem 2.1: linear convergence on strongly-convex quadratics, any
+strongly connected digraph; measured rate vs predicted contraction."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G, loop, theory
+from repro.core.baselines import no_memory
+from repro.core.frodo import FrodoConfig, frodo
+
+
+def _quadratic_problem(n_agents=4, dim=3, seed=0, kappa=10.0):
+    """f_i(x) = 0.5 (x-c_i)^T Q_i (x-c_i); global optimum in closed form."""
+    rng = np.random.default_rng(seed)
+    Qs, cs = [], []
+    for _ in range(n_agents):
+        U, _ = np.linalg.qr(rng.normal(size=(dim, dim)))
+        ev = np.linspace(1.0, kappa, dim)
+        Qs.append(U @ np.diag(ev) @ U.T)
+        cs.append(rng.normal(size=dim))
+    Qs = np.stack(Qs)
+    cs = np.stack(cs)
+    Qsum = Qs.sum(0)
+    x_star = np.linalg.solve(Qsum, np.einsum("aij,aj->i", Qs, cs))
+    Qj, cj = jnp.asarray(Qs, jnp.float32), jnp.asarray(cs, jnp.float32)
+
+    def objective(x, i):
+        d = x - cj[i]
+        return 0.5 * d @ Qj[i] @ d
+
+    mu, L = theory.quadratic_curvature(Qsum / n_agents)
+    return objective, jnp.asarray(x_star, jnp.float32), mu, L
+
+
+def test_exact_convergence_on_complete_graph():
+    """On the paper's experimental setting (complete graph, Xiao-Boyd
+    weights) FrODO converges to x* exactly, linearly."""
+    N = 6
+    W = G.xiao_boyd_weights(G.complete(N))
+    objective, x_star, mu, L = _quadratic_problem(N, dim=3, kappa=5.0)
+    opt = frodo(FrodoConfig(alpha=0.15, beta=0.05, lam=0.15, T=30))
+    x0 = jnp.tile(jnp.asarray([2.0, -1.0, 1.5]), (N, 1))
+    out = loop.run(objective, x0, opt, W, 800, x_star=x_star)
+    assert out["errors"][-1] < 1e-3, out["errors"][-1]
+    rate = theory.measured_rate(out["errors"], burn_in=100)
+    assert 0.0 < rate < 1.0
+
+
+@pytest.mark.parametrize("topo", ["ring", "random"])
+def test_sparse_graph_converges_to_alpha_neighborhood(topo):
+    """REPRODUCTION FINDING (documented in EXPERIMENTS.md §Repro): on
+    non-complete graphs Algorithm 1 (adapt-then-combine with constant step,
+    no gradient tracking) converges *linearly to an O(alpha) neighborhood*
+    of x*, not to x* exactly — Thm 2.1's exact-convergence claim only holds
+    on the complete-graph setting the paper actually tests.  We verify the
+    neighborhood shrinks ~linearly with alpha."""
+    N = 6
+    A = {"ring": lambda: G.ring(N, directed=False),
+         "random": lambda: G.random_strongly_connected(N, 0.3, seed=1)}[
+        topo]()
+    assert G.is_strongly_connected(A)
+    W = G.uniform_weights(A)
+    objective, x_star, mu, L = _quadratic_problem(N, dim=3, kappa=5.0)
+    x0 = jnp.tile(jnp.asarray([2.0, -1.0, 1.5]), (N, 1))
+    floors = []
+    for alpha in (0.15, 0.015):
+        opt = frodo(FrodoConfig(alpha=alpha, beta=alpha / 3, lam=0.15, T=30))
+        out = loop.run(objective, x0, opt, W, 6000, x_star=x_star)
+        floors.append(out["errors"][-1])
+        assert np.isfinite(out["errors"]).all()
+    # smaller alpha -> materially smaller floor (exact ratio is topology-
+    # and horizon-dependent; 0.15 vs 0.015 gives ~3x on these graphs)
+    assert floors[1] < 0.5 * floors[0], floors
+
+
+def test_measured_rate_below_theoretical_bound():
+    """REPRODUCTION FINDING: the initial contraction obeys Thm 2.1's
+    rho = max{|1-a*mu|,|1-a*L|}(1+b*C(lam)), but the *asymptotic* rate is
+    governed by a slow mode the theorem does not model: once the iterate is
+    near x*, stale gradients still in the T-deep fractional buffer keep
+    perturbing the update until they flush (power-law slowly).  We check
+    the initial phase against rho and that the tail still converges."""
+    objective, x_star, mu, L = _quadratic_problem(1, dim=3, seed=2,
+                                                  kappa=3.0)
+    alpha, beta, lam, T = 0.3, 0.01, 0.15, 20
+    rho = theory.rho(alpha, beta, mu, L, T, lam)
+    assert rho < 1.0
+    W = np.ones((1, 1))
+    opt = frodo(FrodoConfig(alpha=alpha, beta=beta, lam=lam, T=T))
+    out = loop.run(objective, jnp.asarray([[2.0, 2.0, 2.0]]), opt, W, 400,
+                   x_star=x_star)
+    errs = out["errors"]
+    # initial contraction phase obeys the Thm 2.1 factor
+    init_ratios = errs[2:9] / errs[1:8]
+    assert np.all(init_ratios <= rho + 0.05), init_ratios
+    # memory-flush slow mode: still converging, but slower than rho
+    assert errs[-1] < errs[40]
+    assert errs[-1] < 1e-2 * errs[0]
+
+
+def test_stable_beta_range_is_stable():
+    objective, x_star, mu, L = _quadratic_problem(4, dim=2, seed=3,
+                                                  kappa=8.0)
+    alpha = 1.0 / L
+    T, lam = 30, 0.15
+    bmax = theory.stable_beta_range(alpha, mu, L, T, lam)
+    assert bmax > 0
+    W = G.xiao_boyd_weights(G.complete(4))
+    opt = frodo(FrodoConfig(alpha=alpha, beta=0.8 * bmax, lam=lam, T=T))
+    x0 = jnp.tile(jnp.asarray([1.0, 1.0]), (4, 1))
+    out = loop.run(objective, x0, opt, W, 2000, x_star=x_star)
+    assert out["errors"][-1] < out["errors"][5]
+
+
+def test_consensus_rate_dominated_by_sigma():
+    """With no local objective pull (alpha=beta=0 via no_memory(0)),
+    disagreement shrinks at sigma(W)."""
+    N = 8
+    W = G.metropolis_weights(G.ring(N, directed=False))
+    s = G.sigma(W)
+
+    def objective(x, i):
+        return jnp.float32(0.0) * jnp.sum(x)
+
+    rng = np.random.default_rng(0)
+    x0 = jnp.asarray(rng.normal(size=(N, 4)), jnp.float32)
+    xbar = np.asarray(x0).mean(0)
+    out = loop.run(objective, x0, no_memory(0.0), W, 50,
+                   x_star=jnp.asarray(xbar))
+    errs = out["errors"]
+    tail_ratio = errs[30] / errs[20]
+    assert tail_ratio <= s ** 10 * 1.5
