@@ -20,12 +20,20 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from scipy import stats
 
+import os as _os
+import sys as _sys
+
+_sys.path.insert(0, _os.path.join(_os.path.dirname(_os.path.dirname(
+    _os.path.abspath(__file__))), "src"))
+
+from repro import obs
 from repro.core import graph as G
 
 T_PAD = 100
@@ -89,6 +97,76 @@ def run_batch(x0s, alphas, betas, lams, Ts):
     return jnp.where(any_hit, hit, K_MAX)
 
 
+def _telemetry_trace(x0, alpha, beta, lam, T, steps):
+    """One run of Algorithm 1 emitting the per-step diagnostics pack:
+    consensus error, ||M||, ||g||, and distance to the optimum.  Same
+    dynamics as ``_frodo_trace`` but per-step observables instead of the
+    error scalar — the trace behind experiments/exp1_metrics.jsonl."""
+    W = jnp.asarray(G.xiao_boyd_weights(G.complete(N_AGENTS)), jnp.float32)
+    n = jnp.arange(1, T_PAD + 1, dtype=jnp.float32)
+    w = n ** (lam - 1.0)
+    w = jnp.where(n <= T, w, 0.0)
+
+    def round_fn(carry, k):
+        xs, hist = carry
+        g = agent_grads(xs)
+        cursor = jnp.mod(k - 1, T_PAD)
+        s = jnp.arange(T_PAD)
+        nn = jnp.mod(cursor - s, T_PAD)
+        nn = jnp.where(nn == 0, T_PAD, nn)
+        M = jnp.tensordot(w[nn - 1], hist, axes=(0, 0))
+
+        def update(args):
+            xs, hist = args
+            return (xs - alpha * g - beta * M, hist.at[cursor].set(g))
+
+        xs, hist = jax.lax.cond(k > 0, update, lambda a: a, (xs, hist))
+
+        def cerr(z):
+            return jnp.sqrt(jnp.mean(jnp.sum(
+                jnp.square(z - jnp.mean(z, axis=0, keepdims=True)), -1)))
+
+        pre = cerr(xs)                    # disagreement entering consensus
+        xs = W @ xs
+        met = {
+            "consensus_error": cerr(xs),  # ~0 on complete graphs by design
+            "consensus_error_pre_mix": pre,
+            "memory_norm": jnp.linalg.norm(M),
+            "grad_norm": jnp.linalg.norm(g),
+            "error": jnp.mean(jnp.linalg.norm(xs, axis=-1)),   # x* = 0
+        }
+        return (xs, hist), met
+
+    xs0 = jnp.tile(x0, (N_AGENTS, 1))
+    hist0 = jnp.zeros((T_PAD, N_AGENTS, 2), jnp.float32)
+    _, mets = jax.lax.scan(round_fn, (xs0, hist0), jnp.arange(steps))
+    return mets
+
+
+def write_metrics_jsonl(path, steps=600, x0=(1.0, 0.0),
+                        alpha=0.8, beta=0.35, lam=0.15, T=90.0):
+    """Run the three variants at one representative hyperparameter point and
+    stream per-step telemetry to JSONL — the single code path BENCH
+    trajectories are generated from."""
+    trace = jax.jit(_telemetry_trace, static_argnames=("steps",))
+    x0j = jnp.asarray(x0, jnp.float32)
+    with obs.JsonlSink(path) as sink:
+        for v in ("fractional", "heavy_ball", "no_memory"):
+            va, vb, vl, vt = variant_params(
+                v, np.float32(alpha), np.float32(beta),
+                np.float32(lam), np.float32(T))
+            jax.block_until_ready(trace(x0j, va, vb, vl, vt, steps))  # warmup
+            t0 = time.perf_counter()
+            mets = jax.block_until_ready(trace(x0j, va, vb, vl, vt, steps))
+            ms_per_step = (time.perf_counter() - t0) * 1e3 / steps
+            host = {k: np.asarray(a) for k, a in mets.items()}
+            for s in range(steps):
+                sink.write({"exp": "exp1_quadratic", "variant": v, "step": s,
+                            "step_time_ms": round(ms_per_step, 6),
+                            **{k: float(a[s]) for k, a in host.items()}})
+    return path
+
+
 def variant_params(variant, alpha, beta, lam, T):
     if variant == "fractional":
         return alpha, beta, lam, T
@@ -107,7 +185,10 @@ def sample_hparams(n, seed):
     return alpha, beta, lam, T
 
 
-def run_experiment(n_sets=100, n_circle=50, seed=0, out=None):
+def run_experiment(n_sets=100, n_circle=50, seed=0, out=None,
+                   metrics_out=None, metrics_steps=600):
+    if metrics_out:
+        write_metrics_jsonl(metrics_out, steps=metrics_steps)
     alpha, beta, lam, T = sample_hparams(n_sets, seed)
     named_starts = {"steepest(1,0)": (1.0, 0.0), "(0.86,0.5)": (0.86, 0.5),
                     "(0.5,0.86)": (0.5, 0.86), "flattest(0,1)": (0.0, 1.0)}
@@ -173,8 +254,14 @@ def main():
     ap.add_argument("--sets", type=int, default=100)
     ap.add_argument("--circle", type=int, default=50)
     ap.add_argument("--out", default="experiments/exp1_quadratic.json")
+    ap.add_argument("--metrics-out",
+                    default="experiments/exp1_metrics.jsonl",
+                    help="per-step telemetry JSONL ('' disables)")
+    ap.add_argument("--metrics-steps", type=int, default=600)
     args = ap.parse_args()
-    print(json.dumps(run_experiment(args.sets, args.circle, out=args.out),
+    print(json.dumps(run_experiment(args.sets, args.circle, out=args.out,
+                                    metrics_out=args.metrics_out or None,
+                                    metrics_steps=args.metrics_steps),
                      indent=1))
 
 

@@ -16,12 +16,20 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os as _os
+import sys as _sys
+
+_sys.path.insert(0, _os.path.join(_os.path.dirname(_os.path.dirname(
+    _os.path.abspath(__file__))), "src"))
+
+from repro import obs
 from repro.core import consensus as C
 from repro.core import graph as G
 from repro.core.baselines import REGISTRY
@@ -63,10 +71,11 @@ def mlp_loss(params, x, y):
     return loss, acc
 
 
-def make_optimizer(name: str, scale: float = 1.0):
+def make_optimizer(name: str, scale: float = 1.0, telemetry: bool = False):
     if name == "frodo":
         return frodo(FrodoConfig(alpha=0.05 * scale, beta=0.02 * scale,
-                                 lam=0.15, T=80, memory_mode="exact"))
+                                 lam=0.15, T=80, memory_mode="exact",
+                                 collect_metrics=telemetry))
     if name == "heavy_ball":
         return REGISTRY["heavy_ball"](alpha=0.05 * scale, beta=0.02 * scale)
     if name == "gd":
@@ -78,12 +87,15 @@ def make_optimizer(name: str, scale: float = 1.0):
     raise ValueError(name)
 
 
-def run_one(name: str, seed: int, steps: int):
+def run_one(name: str, seed: int, steps: int, telemetry: bool = False):
+    """Returns (losses, accs) arrays; with ``telemetry=True`` returns
+    (losses, accs, tel) where ``tel`` holds per-step consensus error,
+    grad/memory norms, and the measured average step_time_ms."""
     X, y = make_classification(n_per_class=200, n_agents=N_AGENTS,
                                seed=seed, noise=2.0)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     W = G.xiao_boyd_weights(G.complete(N_AGENTS))
-    opt = make_optimizer(name)
+    opt = make_optimizer(name, telemetry=telemetry)
     keys = jax.random.split(jax.random.key(seed), N_AGENTS)
     params = jax.vmap(init_mlp)(keys)
     opt_state = opt.init(params)
@@ -93,6 +105,8 @@ def run_one(name: str, seed: int, steps: int):
                                    size=(steps, N_AGENTS, BATCH)))
 
     per_agent = jax.vmap(jax.value_and_grad(mlp_loss, has_aux=True))
+    has_opt_metrics = telemetry and isinstance(opt_state, dict) \
+        and "metrics" in opt_state
 
     @jax.jit
     def step_fn(carry, batch_idx):
@@ -102,11 +116,30 @@ def run_one(name: str, seed: int, steps: int):
         (loss, acc), grads = per_agent(params, xb, yb)
         delta, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, delta)
-        params = C.mix_stacked(params, W)
-        return (params, opt_state), (jnp.mean(loss), jnp.mean(acc))
+        out = (jnp.mean(loss), jnp.mean(acc))
+        if telemetry:
+            params, caux = C.mix_stacked(params, W, with_metrics=True)
+            mem = (opt_state["metrics"]["memory_norm"] if has_opt_metrics
+                   else jnp.float32(0))
+            out = out + ({"consensus_error": caux["consensus_error_post"],
+                          "consensus_error_pre_mix":
+                              caux["consensus_error_pre"],
+                          "grad_norm": obs.global_norm(grads),
+                          "memory_norm": mem},)
+        else:
+            params = C.mix_stacked(params, W)
+        return (params, opt_state), out
 
-    (params, _), (losses, accs) = jax.lax.scan(step_fn, (params, opt_state),
-                                               idx)
+    t0 = time.perf_counter()
+    (params, _), outs = jax.lax.scan(step_fn, (params, opt_state), idx)
+    outs = jax.block_until_ready(outs)
+    ms_per_step = (time.perf_counter() - t0) * 1e3 / steps  # incl. compile
+    if telemetry:
+        losses, accs, tel = outs
+        tel = {k: np.asarray(v) for k, v in tel.items()}
+        tel["step_time_ms"] = ms_per_step
+        return np.asarray(losses), np.asarray(accs), tel
+    losses, accs = outs
     return np.asarray(losses), np.asarray(accs)
 
 
@@ -115,13 +148,30 @@ def steps_to_loss(losses: np.ndarray, target: float) -> int:
     return int(hit[0]) if hit.size else len(losses)
 
 
-def run_experiment(steps=300, n_seeds=5, out=None):
+def run_experiment(steps=300, n_seeds=5, out=None, metrics_out=None):
     methods = ("frodo", "gd", "nesterov", "heavy_ball", "adam")
     curves = {m: [] for m in methods}
+    sink = obs.JsonlSink(metrics_out) if metrics_out else None
     for m in methods:
         for s in range(n_seeds):
-            losses, accs = run_one(m, seed=s, steps=steps)
+            # seed 0 carries the per-step telemetry trace when requested
+            if sink is not None and s == 0:
+                losses, accs, tel = run_one(m, seed=s, steps=steps,
+                                            telemetry=True)
+                ms = tel.pop("step_time_ms")
+                for k in range(steps):
+                    sink.write({"exp": "exp2_federated", "method": m,
+                                "seed": s, "step": k,
+                                "loss": float(losses[k]),
+                                "acc": float(accs[k]),
+                                "step_time_ms": round(ms, 4),
+                                **{kk: float(a[k])
+                                   for kk, a in tel.items()}})
+            else:
+                losses, accs = run_one(m, seed=s, steps=steps)
             curves[m].append((losses, accs))
+    if sink is not None:
+        sink.close()
 
     # speed metric: steps to reach the loss that plain GD reaches at the end
     gd_final = float(np.mean([c[0][-1] for c in curves["gd"]]))
@@ -151,8 +201,12 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seeds", type=int, default=5)
     ap.add_argument("--out", default="experiments/exp2_federated.json")
+    ap.add_argument("--metrics-out",
+                    default="experiments/exp2_metrics.jsonl",
+                    help="per-step telemetry JSONL ('' disables)")
     args = ap.parse_args()
-    print(json.dumps(run_experiment(args.steps, args.seeds, out=args.out),
+    print(json.dumps(run_experiment(args.steps, args.seeds, out=args.out,
+                                    metrics_out=args.metrics_out or None),
                      indent=1))
 
 

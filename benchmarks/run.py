@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV rows.
 Full-protocol runs: ``python benchmarks/exp1_quadratic.py`` (100 sets) and
 ``python benchmarks/exp2_federated.py`` (5 seeds, 300 steps); this harness
 uses reduced sizes so the whole suite stays CPU-friendly.
+
+``--jsonl PATH`` mirrors every row into PATH via ``obs.JsonlSink`` — the
+same sink the trainers and experiment scripts use, so BENCH_*.json
+trajectories come from one code path.
 """
 from __future__ import annotations
 
@@ -20,9 +24,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os as _os
+import sys as _sys
+
+_sys.path.insert(0, _os.path.join(_os.path.dirname(_os.path.dirname(
+    _os.path.abspath(__file__))), "src"))
+
+from repro import obs
+
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    obs.record(name, us, derived=derived)
 
 
 def bench_exp1():
@@ -115,13 +128,23 @@ def bench_roofline():
 
 
 def main() -> None:
-    which = sys.argv[1:] or ["kernels", "consensus", "exp1", "exp2",
-                             "ablations", "roofline"]
+    argv = sys.argv[1:]
+    if "--jsonl" in argv:
+        i = argv.index("--jsonl")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            sys.exit("error: --jsonl requires a path")
+        obs.set_sink(obs.JsonlSink(argv[i + 1]))
+        argv = argv[:i] + argv[i + 2:]
+    which = argv or ["kernels", "consensus", "exp1", "exp2",
+                     "ablations", "roofline"]
     print("name,us_per_call,derived")
-    for w in which:
-        {"exp1": bench_exp1, "exp2": bench_exp2, "kernels": bench_kernels,
-         "consensus": bench_consensus, "roofline": bench_roofline,
-         "ablations": bench_ablations}[w]()
+    try:
+        for w in which:
+            {"exp1": bench_exp1, "exp2": bench_exp2,
+             "kernels": bench_kernels, "consensus": bench_consensus,
+             "roofline": bench_roofline, "ablations": bench_ablations}[w]()
+    finally:
+        obs.set_sink(None).close()
 
 
 if __name__ == "__main__":

@@ -23,6 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.timing import trace_scope
+
 Pytree = Any
 
 
@@ -33,21 +36,35 @@ def is_uniform_complete(W: np.ndarray, tol: float = 1e-9) -> bool:
 
 # ------------------------------------------------------------------ stacked
 
-def mix_stacked(x: Pytree, W: np.ndarray) -> Pytree:
-    """x[a] <- sum_b W[a,b] x[b]   for every leaf (leading dim = agents)."""
+def mix_stacked(x: Pytree, W: np.ndarray, with_metrics: bool = False):
+    """x[a] <- sum_b W[a,b] x[b]   for every leaf (leading dim = agents).
+
+    ``with_metrics=True`` additionally returns the aux scalar pytree
+    ``{"consensus_error_pre", "consensus_error_post"}`` — the RMS per-agent
+    disagreement before/after mixing (the Thm 2.1 Lyapunov quantity).  The
+    default single-return path is byte-identical to a metrics-free build.
+    """
     A = W.shape[0]
     if is_uniform_complete(W):
-        return jax.tree.map(
-            lambda v: jnp.broadcast_to(jnp.mean(v, axis=0, keepdims=True),
-                                       v.shape).astype(v.dtype), x)
-    Wj = jnp.asarray(W, jnp.float32)
+        with trace_scope("consensus.mix_uniform"):
+            out = jax.tree.map(
+                lambda v: jnp.broadcast_to(jnp.mean(v, axis=0, keepdims=True),
+                                           v.shape).astype(v.dtype), x)
+    else:
+        Wj = jnp.asarray(W, jnp.float32)
 
-    def leaf(v):
-        out = jnp.einsum("ab,b...->a...", Wj, v.astype(jnp.float32),
-                         precision=jax.lax.Precision.HIGHEST)
-        return out.astype(v.dtype)
+        def leaf(v):
+            o = jnp.einsum("ab,b...->a...", Wj, v.astype(jnp.float32),
+                           precision=jax.lax.Precision.HIGHEST)
+            return o.astype(v.dtype)
 
-    return jax.tree.map(leaf, x)
+        with trace_scope("consensus.mix_general"):
+            out = jax.tree.map(leaf, x)
+    if not with_metrics:
+        return out
+    aux = {"consensus_error_pre": obs_metrics.consensus_error(x),
+           "consensus_error_post": obs_metrics.consensus_error(out)}
+    return out, aux
 
 
 def mix_hierarchical(x: Pytree, W_intra: np.ndarray, W_pod: np.ndarray,
@@ -79,7 +96,8 @@ def mix_hierarchical(x: Pytree, W_intra: np.ndarray, W_pod: np.ndarray,
             u = cross(u)
         return u.reshape(v.shape).astype(v.dtype)
 
-    return jax.tree.map(leaf, x)
+    with trace_scope("consensus.mix_hierarchical"):
+        return jax.tree.map(leaf, x)
 
 
 def mix_uniform_constrained(tree: Pytree, specs: Pytree, mesh) -> Pytree:
@@ -117,8 +135,9 @@ def pmean_shardmap(tree: Pytree, agent_axes, mesh) -> Pytree:
     def f(t):
         return jax.tree.map(lambda v: jax.lax.pmean(v, axes), t)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(specs,),
-                         out_specs=specs, axis_names=set(axes))(tree)
+    with trace_scope("consensus.pmean_shardmap"):
+        return jax.shard_map(f, mesh=mesh, in_specs=(specs,),
+                             out_specs=specs, axis_names=set(axes))(tree)
 
 
 # ------------------------------------------------------------------- mapped
@@ -131,7 +150,8 @@ def pmean_mix(x: Pytree, axis_names: Sequence[str]) -> Pytree:
         for ax in axis_names:
             out = jax.lax.pmean(out, ax)
         return out.astype(v.dtype)
-    return jax.tree.map(leaf, x)
+    with trace_scope("consensus.pmean_mix"):
+        return jax.tree.map(leaf, x)
 
 
 def ring_mix(x: Pytree, axis_name: str, w_self: float = 0.5,
@@ -152,7 +172,8 @@ def ring_mix(x: Pytree, axis_name: str, w_self: float = 0.5,
             acc = acc + w_nbr * bwd.astype(jnp.float32)
         return acc.astype(v.dtype)
 
-    return jax.tree.map(leaf, x)
+    with trace_scope("consensus.ring_mix"):
+        return jax.tree.map(leaf, x)
 
 
 def general_mix(x: Pytree, W: np.ndarray, axis_name: str) -> Pytree:
@@ -166,4 +187,5 @@ def general_mix(x: Pytree, W: np.ndarray, axis_name: str) -> Pytree:
         out = jnp.tensordot(Wj[idx], allv.astype(jnp.float32), axes=(0, 0))
         return out.astype(v.dtype)
 
-    return jax.tree.map(leaf, x)
+    with trace_scope("consensus.general_mix"):
+        return jax.tree.map(leaf, x)

@@ -23,10 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import memory as fmem
+from repro.obs import metrics as obs_metrics
 
 Params = Any
 Grads = Any
 State = Any
+
+#: scalar aux metrics attached to the optimizer state when
+#: ``FrodoConfig.collect_metrics`` is set (see docs/observability.md)
+METRIC_NAMES = ("grad_norm", "memory_norm", "update_norm")
 
 
 class Optimizer(NamedTuple):
@@ -48,6 +53,7 @@ class FrodoConfig:
     use_kernel: bool = False    # route update arithmetic through Pallas ops
     acc_dtype: str = "float32"  # expsum accumulator dtype (bf16 halves state)
     pad_T: int = 0              # buffer size override (weights zero beyond T)
+    collect_metrics: bool = False  # aux ||g||/||M||/||delta|| in state["metrics"]
 
     def __post_init__(self):
         if self.memory_mode not in ("exact", "expsum"):
@@ -72,27 +78,41 @@ def _frodo_exact(cfg: FrodoConfig) -> Optimizer:
 
     def init(params: Params) -> State:
         hist = jax.tree.map(lambda p: fmem.exact_init(p, T_buf), params)
-        return {"step": jnp.zeros((), jnp.int32), "hist": hist}
+        state = {"step": jnp.zeros((), jnp.int32), "hist": hist}
+        if cfg.collect_metrics:
+            state["metrics"] = obs_metrics.zeros_like_metrics(METRIC_NAMES)
+        return state
 
     def update(grads: Grads, state: State, params: Optional[Params] = None):
         cursor = jnp.mod(state["step"], T_buf)
+        collect = cfg.collect_metrics
         if cfg.use_kernel:
             from repro.kernels import ops as kops
             def leaf(g, h):
                 newx_delta, newh = kops.frodo_update(
                     g, h, cursor, weights, cfg.alpha, cfg.beta)
-                return newx_delta, newh
+                # the kernel fuses M into the axpy; recompute it only when
+                # telemetry asks for ||M||
+                M = (fmem.exact_memory_term(h, cursor, weights)
+                     if collect else None)
+                return newx_delta, newh, M
         else:
             def leaf(g, h):
                 M = fmem.exact_memory_term(h, cursor, weights)
                 delta = -(cfg.alpha * g + cfg.beta * M.astype(g.dtype))
-                return delta, fmem.exact_push(h, cursor, g)
+                return delta, fmem.exact_push(h, cursor, g), \
+                    (M if collect else None)
         flat_g, treedef = jax.tree.flatten(grads)
         flat_h = treedef.flatten_up_to(state["hist"])
         out = [leaf(g, h) for g, h in zip(flat_g, flat_h)]
         delta = treedef.unflatten([o[0] for o in out])
         hist = treedef.unflatten([o[1] for o in out])
-        return delta, {"step": state["step"] + 1, "hist": hist}
+        new_state = {"step": state["step"] + 1, "hist": hist}
+        if collect:
+            Ms = treedef.unflatten([o[2] for o in out])
+            new_state["metrics"] = obs_metrics.frodo_step_metrics(
+                grads, Ms, delta)
+        return delta, new_state
 
     return Optimizer(init, update)
 
@@ -109,25 +129,37 @@ def _frodo_expsum(cfg: FrodoConfig) -> Optimizer:
         adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.acc_dtype]
         acc = jax.tree.map(
             lambda p: fmem.expsum_init(p, cfg.K).astype(adt), params)
-        return {"step": jnp.zeros((), jnp.int32), "acc": acc}
+        state = {"step": jnp.zeros((), jnp.int32), "acc": acc}
+        if cfg.collect_metrics:
+            state["metrics"] = obs_metrics.zeros_like_metrics(METRIC_NAMES)
+        return state
 
     def update(grads: Grads, state: State, params: Optional[Params] = None):
+        collect = cfg.collect_metrics
         if cfg.use_kernel:
             from repro.kernels import ops as kops
             def leaf(g, a):
-                return kops.frodo_expsum_update(
+                delta, newa = kops.frodo_expsum_update(
                     g, a, rates, coeffs, cfg.alpha, cfg.beta)
+                M = fmem.expsum_memory_term(a, coeffs) if collect else None
+                return delta, newa, M
         else:
             def leaf(g, a):
                 M = fmem.expsum_memory_term(a, coeffs)
                 delta = -(cfg.alpha * g + cfg.beta * M.astype(g.dtype))
-                return delta, fmem.expsum_push(a, rates, g)
+                return delta, fmem.expsum_push(a, rates, g), \
+                    (M if collect else None)
         flat_g, treedef = jax.tree.flatten(grads)
         flat_a = treedef.flatten_up_to(state["acc"])
         out = [leaf(g, a) for g, a in zip(flat_g, flat_a)]
         delta = treedef.unflatten([o[0] for o in out])
         acc = treedef.unflatten([o[1] for o in out])
-        return delta, {"step": state["step"] + 1, "acc": acc}
+        new_state = {"step": state["step"] + 1, "acc": acc}
+        if collect:
+            Ms = treedef.unflatten([o[2] for o in out])
+            new_state["metrics"] = obs_metrics.frodo_step_metrics(
+                grads, Ms, delta)
+        return delta, new_state
 
     return Optimizer(init, update)
 

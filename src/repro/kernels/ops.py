@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core import memory as fmem
 from repro.kernels import frodo_update as K
+from repro.obs.timing import trace_scope
 
 LANE = K.LANE
 
@@ -39,11 +40,12 @@ def frodo_update(g: jax.Array, hist: jax.Array, cursor: jax.Array,
     nn = jnp.mod(cursor - s, T)
     nn = jnp.where(nn == 0, T, nn)
     w_slot = weights[nn - 1]
-    g2, n = _to_2d(g)
-    h2 = jax.vmap(lambda h: _to_2d(h)[0])(hist)
-    delta2 = K.exact_update_2d(g2, h2, w_slot, alpha, beta)
-    delta = _from_2d(delta2, g.shape, n)
-    new_hist = fmem.exact_push(hist, cursor, g)
+    with trace_scope("pallas.frodo_exact_update"):
+        g2, n = _to_2d(g)
+        h2 = jax.vmap(lambda h: _to_2d(h)[0])(hist)
+        delta2 = K.exact_update_2d(g2, h2, w_slot, alpha, beta)
+        delta = _from_2d(delta2, g.shape, n)
+        new_hist = fmem.exact_push(hist, cursor, g)
     return delta, new_hist
 
 
@@ -51,10 +53,12 @@ def frodo_update(g: jax.Array, hist: jax.Array, cursor: jax.Array,
 def frodo_expsum_update(g: jax.Array, acc: jax.Array, rates: jax.Array,
                         coeffs: jax.Array, alpha: float, beta: float):
     """Fused exp-sum FrODO update.  acc: (K, ...).  Returns (delta, new_acc)."""
-    g2, n = _to_2d(g)
-    a2 = jax.vmap(lambda a: _to_2d(a)[0])(acc)
-    delta2, newacc2 = K.expsum_update_2d(g2, a2, rates, coeffs, alpha, beta)
-    delta = _from_2d(delta2, g.shape, n)
-    new_acc = jax.vmap(lambda a, ref: _from_2d(a, ref.shape, n))(
-        newacc2, acc)
+    with trace_scope("pallas.frodo_expsum_update"):
+        g2, n = _to_2d(g)
+        a2 = jax.vmap(lambda a: _to_2d(a)[0])(acc)
+        delta2, newacc2 = K.expsum_update_2d(g2, a2, rates, coeffs, alpha,
+                                             beta)
+        delta = _from_2d(delta2, g.shape, n)
+        new_acc = jax.vmap(lambda a, ref: _from_2d(a, ref.shape, n))(
+            newacc2, acc)
     return delta, new_acc

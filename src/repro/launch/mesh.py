@@ -3,23 +3,33 @@ touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: make_mesh has no axis_types kwarg
+    AxisType = None
+
+
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (CPU tests / examples)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh_auto((n // model_parallel, model_parallel),
+                          ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--consensus-interval", type=int, default=1)
     ap.add_argument("--force-devices", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--metrics-out", default="",
+                    help="JSONL path for per-step telemetry (implies "
+                         "--collect-metrics)")
+    ap.add_argument("--collect-metrics", action="store_true",
+                    help="compute consensus_error/memory_norm/... in-step")
     args = ap.parse_args()
 
     if args.force_devices and "XLA_FLAGS" not in os.environ:
@@ -40,6 +45,7 @@ def main():
             f"--xla_force_host_platform_device_count={args.force_devices}")
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
+    from repro import obs
     from repro.configs import registry as REG
     from repro.data.synthetic import TokenPipeline, augment_modalities
     from repro.training.trainer import Trainer
@@ -47,19 +53,28 @@ def main():
 
     cfg = (REG.get_smoke_config(args.arch) if args.smoke
            else REG.get_config(args.arch))
+    collect = args.collect_metrics or bool(args.metrics_out)
     tc = TrainConfig(optimizer=args.optimizer, alpha=args.alpha,
                      beta=args.beta, lam=args.lam, T=args.T,
                      memory_mode=args.memory_mode, remat=not args.smoke,
                      topology=args.topology,
-                     consensus_interval=args.consensus_interval)
+                     consensus_interval=args.consensus_interval,
+                     collect_metrics=collect)
+    sink = obs.JsonlSink(args.metrics_out) if args.metrics_out else None
+    tokens_per_step = args.agents * args.batch_per_agent * args.seq
     trainer = Trainer(cfg, tc, n_agents=args.agents,
-                      ckpt_dir=args.ckpt_dir, log_every=5)
+                      ckpt_dir=args.ckpt_dir, log_every=5, sink=sink,
+                      tokens_per_step=tokens_per_step)
     state = trainer.init()
     data = augment_modalities(
         iter(TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
                            batch_per_agent=args.batch_per_agent,
                            n_agents=args.agents)), cfg)
-    trainer.run(state, data, args.steps)
+    try:
+        trainer.run(state, data, args.steps)
+    finally:
+        if sink is not None:
+            sink.close()
 
 
 if __name__ == "__main__":

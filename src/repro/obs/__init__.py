@@ -1,0 +1,25 @@
+"""Observability: metrics sinks + jit-safe metric math + trace annotation.
+
+See docs/observability.md.  Import surface is intentionally flat:
+
+    from repro import obs
+    obs.set_sink(obs.JsonlSink("experiments/run.jsonl"))
+    obs.record("loss", 0.3, step=7)
+
+    # inside jit: pure aux-pytree producers
+    err = obs.consensus_error(stacked_params)
+"""
+from repro.obs.metrics import (JsonlSink, MemorySink, MetricsSink, NullSink,
+                               consensus_error, frodo_step_metrics,
+                               get_sink, global_norm, read_jsonl, record,
+                               scalarize, set_sink, tree_sq_sum,
+                               zeros_like_metrics)
+from repro.obs.timing import (StepTimer, annotate, step_annotation,
+                              trace_scope)
+
+__all__ = [
+    "JsonlSink", "MemorySink", "MetricsSink", "NullSink", "StepTimer",
+    "annotate", "consensus_error", "frodo_step_metrics", "get_sink",
+    "global_norm", "read_jsonl", "record", "scalarize", "set_sink",
+    "step_annotation", "trace_scope", "tree_sq_sum", "zeros_like_metrics",
+]

@@ -1,0 +1,198 @@
+"""Metrics layer: host-side sinks + jit-safe metric computations.
+
+Two halves, matching the two worlds a metric lives in:
+
+* **Inside jit** — pure functions on pytrees (``global_norm``,
+  ``consensus_error``, ...).  Producers (``frodo.update``,
+  ``consensus.mix_stacked``, ``training.train_step``) call them only when
+  their static ``collect_metrics`` flag is set and return the results as an
+  **auxiliary pytree of scalars**.  No host callbacks, no tracing hazards;
+  with the flag off the jaxpr is byte-identical to a build that never heard
+  of metrics (tests/test_obs.py proves this).
+
+* **On the host** — a ``MetricsSink`` that the trainer / benchmark drivers
+  drain the aux pytree into, one JSON-serialisable record per step.  The
+  JSONL backend is the single code path that produces BENCH_*.json
+  trajectories; the in-memory backend backs tests and notebook use.
+
+``record(name, value, step)`` is the convenience entry point for host-side
+code (benchmark loops, engines) that already holds concrete values.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------- sinks
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    """Anything that can absorb one flat dict of JSON-serialisable values."""
+
+    def write(self, record: Dict[str, Any]) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class NullSink:
+    """Drops everything.  The disabled default — zero host cost."""
+
+    def write(self, record: Dict[str, Any]) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class MemorySink:
+    """Accumulates records in ``self.records`` (tests, notebooks)."""
+
+    def __init__(self) -> None:
+        self.records: List[Dict[str, Any]] = []
+
+    def write(self, record: Dict[str, Any]) -> None:
+        self.records.append(dict(record))
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink:
+    """One JSON object per line, flushed per write so partial runs are
+    readable.  ``mode='w'`` truncates (benchmark reruns), ``'a'`` appends
+    (long trainings resumed across processes)."""
+
+    def __init__(self, path: str, mode: str = "w") -> None:
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, mode)
+        self._lock = threading.Lock()
+
+    def write(self, record: Dict[str, Any]) -> None:
+        line = json.dumps(scalarize(record))
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Load a JSONL metrics file back into a list of records."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def scalarize(record: Dict[str, Any]) -> Dict[str, Any]:
+    """Convert jax/numpy scalars to plain Python for json.dumps; drop
+    non-scalar array entries (per-agent vectors etc. stay out of JSONL)."""
+    out: Dict[str, Any] = {}
+    for k, v in record.items():
+        if isinstance(v, (jax.Array, np.ndarray, np.generic)):
+            a = np.asarray(v)
+            if a.ndim == 0:
+                out[k] = a.item()
+        else:
+            out[k] = v
+    return out
+
+
+# ------------------------------------------------------- module-default sink
+
+_DEFAULT_SINK: MetricsSink = NullSink()
+
+
+def set_sink(sink: Optional[MetricsSink]) -> MetricsSink:
+    """Install the process-default sink; returns the previous one."""
+    global _DEFAULT_SINK
+    prev = _DEFAULT_SINK
+    _DEFAULT_SINK = sink if sink is not None else NullSink()
+    return prev
+
+
+def get_sink() -> MetricsSink:
+    return _DEFAULT_SINK
+
+
+def record(name: str, value: Any, step: Optional[int] = None,
+           sink: Optional[MetricsSink] = None, **extra: Any) -> None:
+    """Host-side convenience: write one named value (plus extras) to the
+    sink.  Call OUTSIDE jit — jitted code returns aux pytrees instead."""
+    rec: Dict[str, Any] = {"name": name, "value": value}
+    if step is not None:
+        rec["step"] = step
+    rec.update(extra)
+    (sink or _DEFAULT_SINK).write(rec)
+
+
+# ----------------------------------------------------- jit-safe computations
+
+def tree_sq_sum(tree: Pytree) -> jax.Array:
+    """Sum of squares over every leaf (float32 accumulation)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.float32(0)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    """L2 norm over the flattened pytree."""
+    return jnp.sqrt(tree_sq_sum(tree))
+
+
+def consensus_error(tree: Pytree) -> jax.Array:
+    """RMS per-agent disagreement sqrt(1/A sum_i ||x_i - x̄||^2), with the
+    norm taken over all leaves jointly.  Leaves carry a leading agent dim A.
+
+    This is the Lyapunov quantity FrODO's linear-convergence claim (Thm 2.1)
+    is stated against; it hits 0 exactly at consensus.
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.float32(0)
+    A = leaves[0].shape[0]
+    per_agent = jnp.zeros((A,), jnp.float32)
+    for l in leaves:
+        v = l.astype(jnp.float32)
+        mean = jnp.mean(v, axis=0, keepdims=True)
+        per_agent = per_agent + jnp.sum(
+            jnp.square(v - mean).reshape(A, -1), axis=1)
+    return jnp.sqrt(jnp.mean(per_agent))
+
+
+def frodo_step_metrics(grads: Pytree, memory_terms: Pytree,
+                       delta: Pytree) -> Dict[str, jax.Array]:
+    """The per-update scalar pack producers attach as the aux pytree."""
+    return {
+        "grad_norm": global_norm(grads),
+        "memory_norm": global_norm(memory_terms),
+        "update_norm": global_norm(delta),
+    }
+
+
+def zeros_like_metrics(names: Iterable[str]) -> Dict[str, jax.Array]:
+    """Stable-structure placeholder so optimizer init/update pytrees match."""
+    return {n: jnp.zeros((), jnp.float32) for n in names}

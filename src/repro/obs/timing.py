@@ -1,0 +1,102 @@
+"""Step timing, throughput counters, and profiler trace annotation.
+
+``StepTimer`` is the host-side clock the trainer / serving engine / bench
+drivers share: call ``tick()`` once per completed step (AFTER blocking on
+the step's outputs — an async dispatch that hasn't materialised yet would
+time the enqueue, not the work) and read ``step_time_ms`` / throughput.
+
+``annotate`` wraps host-side regions in ``jax.profiler.TraceAnnotation`` so
+they show up as named spans in a captured trace; ``trace_scope`` is the
+in-jit equivalent (``jax.named_scope``) used around the Pallas kernel path
+and the consensus collectives.  Both degrade to no-ops on jax builds that
+lack the API — telemetry must never take the training loop down.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, Iterator, Optional
+
+import jax
+
+
+@contextlib.contextmanager
+def annotate(name: str, **kwargs) -> Iterator[None]:
+    """Host-side trace span (visible in TensorBoard / perfetto captures)."""
+    try:
+        ctx = jax.profiler.TraceAnnotation(name, **kwargs)
+    except Exception:                                    # pragma: no cover
+        ctx = contextlib.nullcontext()
+    with ctx:
+        yield
+
+
+@contextlib.contextmanager
+def step_annotation(name: str, step: int) -> Iterator[None]:
+    """``StepTraceAnnotation`` — lets the profiler group a whole train step."""
+    try:
+        ctx = jax.profiler.StepTraceAnnotation(name, step_num=step)
+    except Exception:                                    # pragma: no cover
+        ctx = contextlib.nullcontext()
+    with ctx:
+        yield
+
+
+def trace_scope(name: str):
+    """In-jit named scope: tags the emitted HLO so kernel/collective ops are
+    attributable in profiles.  Safe under tracing (pure metadata)."""
+    try:
+        return jax.named_scope(name)
+    except Exception:                                    # pragma: no cover
+        return contextlib.nullcontext()
+
+
+class StepTimer:
+    """Wall-clock per step + exponential moving average + items/s.
+
+    ``items_per_step`` is whatever unit throughput should be quoted in
+    (tokens, samples, decoded tokens); pass 0 to skip throughput.
+    """
+
+    def __init__(self, items_per_step: float = 0.0, ema: float = 0.9) -> None:
+        self.items_per_step = items_per_step
+        self._ema_coef = ema
+        self.reset()
+
+    def reset(self) -> None:
+        self._last: Optional[float] = None
+        self._t0 = time.perf_counter()
+        self.steps = 0
+        self.step_time_ms = 0.0
+        self.ema_step_time_ms = 0.0
+
+    def tick(self) -> float:
+        """Mark one completed step; returns this step's wall ms."""
+        now = time.perf_counter()
+        prev = self._last if self._last is not None else self._t0
+        self._last = now
+        self.step_time_ms = (now - prev) * 1e3
+        self.ema_step_time_ms = (
+            self.step_time_ms if self.steps == 0 else
+            self._ema_coef * self.ema_step_time_ms
+            + (1 - self._ema_coef) * self.step_time_ms)
+        self.steps += 1
+        return self.step_time_ms
+
+    @property
+    def wall_s(self) -> float:
+        return (self._last or time.perf_counter()) - self._t0
+
+    @property
+    def items_per_s(self) -> float:
+        if not self.items_per_step or self.step_time_ms <= 0:
+            return 0.0
+        return self.items_per_step / (self.step_time_ms * 1e-3)
+
+    def counters(self) -> Dict[str, float]:
+        """The standard keys trainers merge into each metrics record."""
+        out = {"step_time_ms": round(self.step_time_ms, 3),
+               "wall_s": round(self.wall_s, 3)}
+        if self.items_per_step:
+            out["throughput_items_per_s"] = round(self.items_per_s, 1)
+        return out

@@ -7,6 +7,7 @@ examples and tests.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Dict, Optional
 
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import decode as D
 from repro.models import transformer as T
@@ -46,15 +48,24 @@ def make_prefill(cfg: ModelConfig):
 
 @dataclasses.dataclass
 class Engine:
-    """Minimal batched serving loop (greedy)."""
+    """Minimal batched serving loop (greedy).
+
+    Per-``generate`` timing counters land in ``last_stats`` (prefill /
+    decode wall, tokens/s) and, when a ``sink`` is attached, are written as
+    one ``serve.generate`` record per call — the serving half of the
+    telemetry pipeline (docs/observability.md).
+    """
     cfg: ModelConfig
     params: Any
     max_len: int = 256
     window_override: Optional[int] = None
+    sink: Optional[obs.MetricsSink] = None
 
     def __post_init__(self):
         self._step = jax.jit(make_serve_step(self.cfg, self.window_override))
         self._cache0 = D.init_cache(self.cfg, 0, 0)  # placeholder, unused
+        self.last_stats: Dict[str, float] = {}
+        self._n_calls = 0
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  frames: Optional[np.ndarray] = None) -> np.ndarray:
@@ -64,17 +75,38 @@ class Engine:
         cache = D.init_cache(self.cfg, B, self.max_len, self.window_override)
         if self.cfg.family == "audio":
             assert frames is not None
-            cache = D.encode_for_decode(self.params, cache,
-                                        jnp.asarray(frames), self.cfg)
+            with obs.annotate("serve.encode"):
+                cache = D.encode_for_decode(self.params, cache,
+                                            jnp.asarray(frames), self.cfg)
+        t0 = time.perf_counter()
         tok = None
-        for t in range(P):
-            tok, cache = self._step(self.params, cache,
-                                    jnp.asarray(prompts[:, t:t + 1]),
-                                    jnp.int32(t))
+        with obs.annotate("serve.prefill"):
+            for t in range(P):
+                tok, cache = self._step(self.params, cache,
+                                        jnp.asarray(prompts[:, t:t + 1]),
+                                        jnp.int32(t))
+            jax.block_until_ready(tok)
+        t1 = time.perf_counter()
         out = []
         pos = P
-        for _ in range(n_new):
-            out.append(np.asarray(tok[:, 0]))
-            tok, cache = self._step(self.params, cache, tok, jnp.int32(pos))
-            pos += 1
+        with obs.annotate("serve.decode"):
+            for _ in range(n_new):
+                out.append(np.asarray(tok[:, 0]))
+                tok, cache = self._step(self.params, cache, tok,
+                                        jnp.int32(pos))
+                pos += 1
+            jax.block_until_ready(tok)
+        t2 = time.perf_counter()
+        prefill_s, decode_s = t1 - t0, t2 - t1
+        self.last_stats = {
+            "batch": B, "prompt_len": P, "new_tokens": n_new,
+            "prefill_ms": round(prefill_s * 1e3, 3),
+            "decode_ms": round(decode_s * 1e3, 3),
+            "decode_ms_per_token": round(decode_s * 1e3 / max(n_new, 1), 3),
+            "decode_tokens_per_s": round(B * n_new / max(decode_s, 1e-9), 1),
+        }
+        if self.sink is not None:
+            self.sink.write({"name": "serve.generate", "step": self._n_calls,
+                             **self.last_stats})
+        self._n_calls += 1
         return np.stack(out, axis=1)

@@ -24,6 +24,7 @@ from repro.core.frodo import FrodoConfig, Optimizer, apply_updates, frodo
 from repro.core import baselines
 from repro.distributed import sharding as SH
 from repro.models import transformer as T
+from repro.obs import metrics as obs_metrics
 from repro.training.loss import (cross_entropy, chunked_cross_entropy,
                                  clip_by_global_norm)
 
@@ -48,6 +49,10 @@ class TrainConfig:
     weights: str = "xiao_boyd"           # uniform|metropolis|xiao_boyd
     consensus_interval: int = 1          # mix every H steps (beyond-paper)
     cross_pod_period: int = 1            # hierarchical: DCN mixing period
+    # observability: emit consensus_error/memory_norm/... as extra scalar
+    # outputs of train_step (drained to a sink by the trainer).  Static flag:
+    # False lowers to a jaxpr byte-identical to a metrics-free build.
+    collect_metrics: bool = False
 
 
 class TrainState(NamedTuple):
@@ -61,7 +66,8 @@ def build_optimizer(tc: TrainConfig) -> Optimizer:
         return frodo(FrodoConfig(alpha=tc.alpha, beta=tc.beta, lam=tc.lam,
                                  T=tc.T, memory_mode=tc.memory_mode, K=tc.K,
                                  use_kernel=tc.use_kernel,
-                                 acc_dtype=tc.acc_dtype))
+                                 acc_dtype=tc.acc_dtype,
+                                 collect_metrics=tc.collect_metrics))
     if tc.optimizer == "no_memory":
         return baselines.no_memory(tc.alpha)
     if tc.optimizer == "heavy_ball":
@@ -293,6 +299,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_agents: int,
 
         delta, opt_state = opt.update(grads, state.opt_state, state.params)
         params = apply_updates(state.params, delta)
+        pre_mix = params
 
         # stage 3: consensus over the agent dim
         if n_agents > 1:
@@ -322,6 +329,17 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_agents: int,
         out_metrics = {"loss": jnp.mean(loss), "grad_norm": gnorm,
                        "agent_loss": loss}
         out_metrics.update({k: jnp.mean(v) for k, v in metrics.items()})
+        if tc.collect_metrics:
+            # optimizer aux (||M||, ||delta||; its grad_norm is post-clip —
+            # the pre-clip gnorm above wins the key)
+            if isinstance(opt_state, dict):
+                for k, v in opt_state.get("metrics", {}).items():
+                    out_metrics.setdefault(k, v)
+            out_metrics["consensus_error_pre_mix"] = \
+                obs_metrics.consensus_error(pre_mix)
+            out_metrics["consensus_error"] = obs_metrics.consensus_error(
+                params)
+            out_metrics["param_norm"] = obs_metrics.global_norm(params)
         return new_state, out_metrics
 
     return train_step

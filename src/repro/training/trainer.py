@@ -1,4 +1,11 @@
-"""Trainer loop: wires data pipeline, train step, metrics, checkpoints."""
+"""Trainer loop: wires data pipeline, train step, metrics, checkpoints.
+
+Telemetry: every step's scalar metrics (the aux pytree returned by
+``train_step``, see ``TrainConfig.collect_metrics``) are merged with the
+host-side step-timing counters and drained into ``sink`` (any
+``obs.MetricsSink``).  ``metrics_file`` keeps the legacy end-of-run JSON
+history; ``sink`` is the per-step JSONL/streaming path.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -10,6 +17,7 @@ from typing import Any, Dict, Iterator, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.training import checkpoint as ckpt
 from repro.training.train_step import (TrainConfig, TrainState,
@@ -26,6 +34,8 @@ class Trainer:
     ckpt_every: int = 0
     ckpt_dir: str = "checkpoints"
     metrics_file: Optional[str] = None
+    sink: Optional[obs.MetricsSink] = None
+    tokens_per_step: float = 0.0   # for throughput_items_per_s in the sink
 
     def __post_init__(self):
         self.step_fn = jax.jit(
@@ -38,19 +48,30 @@ class Trainer:
 
     def run(self, state: TrainState, data: Iterator[Dict[str, np.ndarray]],
             steps: int) -> TrainState:
-        t0 = time.time()
+        timer = obs.StepTimer(items_per_step=self.tokens_per_step)
         for i in range(steps):
             batch = next(data)
-            state, metrics = self.step_fn(state, batch)
+            with obs.step_annotation("train", step=i):
+                state, metrics = self.step_fn(state, batch)
+            if self.sink is not None:
+                # block so the timer measures the step, not the dispatch
+                jax.block_until_ready(metrics)
+            timer.tick()
+            scalars = {k: float(np.asarray(v))
+                       for k, v in metrics.items()
+                       if np.asarray(v).ndim == 0}
+            if self.sink is not None:
+                rec = dict(step=i, **scalars, **timer.counters())
+                self.sink.write(rec)
             if i % self.log_every == 0 or i == steps - 1:
-                m = {k: float(np.asarray(v)) for k, v in metrics.items()
-                     if np.asarray(v).ndim == 0}
-                m.update(step=i, wall=round(time.time() - t0, 2))
+                m = dict(scalars)
+                m.update(step=i, wall=round(timer.wall_s, 2))
                 self._history.append(m)
                 print(json.dumps(m), flush=True)
             if self.ckpt_every and (i + 1) % self.ckpt_every == 0:
-                ckpt.save(os.path.join(self.ckpt_dir, f"step{i+1}.npz"),
-                          state.params, {"step": i + 1})
+                with obs.annotate("checkpoint_save"):
+                    ckpt.save(os.path.join(self.ckpt_dir, f"step{i+1}.npz"),
+                              state.params, {"step": i + 1})
         if self.metrics_file:
             os.makedirs(os.path.dirname(self.metrics_file) or ".",
                         exist_ok=True)

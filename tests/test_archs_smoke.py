@@ -16,6 +16,16 @@ from repro.training.train_step import (TrainConfig, init_train_state,
 
 ARCHS = list(REG.ARCH_IDS)
 
+# tier-1 keeps one representative dense arch per test; the full per-arch
+# sweep is tier-2 (``-m slow`` / the weekly CI job).  Compile time on CPU,
+# not runtime, is what makes the sweep minutes-long.
+FAST_ARCHS = ("h2o-danube-1.8b",)
+
+
+def _arch_params(fast=FAST_ARCHS):
+    return [pytest.param(a, marks=() if a in fast else (pytest.mark.slow,))
+            for a in ARCHS]
+
 
 def _batch(cfg, n_agents, B, S, seed=0):
     rng = np.random.default_rng(seed)
@@ -44,7 +54,8 @@ def test_smoke_reduced_config_limits(arch):
     assert cfg.family == REG.get_config(arch).family
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(
+    fast=("h2o-danube-1.8b", "nemotron-4-15b")))
 def test_smoke_forward_shapes_no_nans(arch):
     cfg = REG.get_smoke_config(arch)
     params = T.init_params(jax.random.key(0), cfg)
@@ -56,7 +67,7 @@ def test_smoke_forward_shapes_no_nans(arch):
     assert np.isfinite(float(aux))
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params())
 def test_smoke_frodo_train_step(arch):
     cfg = REG.get_smoke_config(arch)
     n_agents = 2
@@ -77,7 +88,8 @@ def test_smoke_frodo_train_step(arch):
     assert moved
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(
+    fast=("h2o-danube-1.8b", "mamba2-780m", "nemotron-4-15b")))
 def test_smoke_decode_step(arch):
     cfg = REG.get_smoke_config(arch)
     params = T.init_params(jax.random.key(1), cfg)
@@ -93,6 +105,7 @@ def test_smoke_decode_step(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+@pytest.mark.slow
 def test_consensus_equalizes_agents():
     """After one step with complete uniform W, all agents share params."""
     cfg = REG.get_smoke_config("h2o-danube-1.8b")
@@ -107,6 +120,7 @@ def test_consensus_equalizes_agents():
                                    atol=2e-2)
 
 
+@pytest.mark.slow
 def test_microbatching_matches_full_batch():
     """mb=2 gradient accumulation == single big batch (same data)."""
     cfg = REG.get_smoke_config("h2o-danube-1.8b").replace(

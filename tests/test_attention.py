@@ -17,7 +17,9 @@ def _qkv(B=2, S=256, H=4, G=2, hd=16, seed=0):
 
 
 @pytest.mark.parametrize("window", [0, 64])
-@pytest.mark.parametrize("chunk", [32, 64, 128])
+@pytest.mark.parametrize(
+    "chunk", [32, pytest.param(64, marks=pytest.mark.slow),
+              pytest.param(128, marks=pytest.mark.slow)])
 def test_blockwise_matches_direct(window, chunk):
     q, k, v = _qkv()
     S = q.shape[1]
@@ -53,7 +55,8 @@ def _decode_cfg(window=0):
                        param_dtype="float32", compute_dtype="float32")
 
 
-@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize(
+    "window", [pytest.param(0, marks=pytest.mark.slow), 8])
 def test_decode_matches_full_attention(window):
     """Token-by-token decode_attention == full self_attention row."""
     cfg = _decode_cfg(window)
@@ -79,6 +82,7 @@ def test_ring_buffer_cache_is_window_sized():
     assert cache.k.shape[1] == 8
 
 
+@pytest.mark.slow
 def test_mla_decode_matches_full():
     from repro.configs.base import MLAConfig
     cfg = ModelConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=4,

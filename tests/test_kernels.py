@@ -1,11 +1,19 @@
 """Per-kernel allclose vs the pure-jnp oracle: shape x dtype sweeps +
-hypothesis property tests (interpret mode on CPU)."""
-import hypothesis
-import hypothesis.strategies as st
+hypothesis property tests (interpret mode on CPU).
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt): the
+sweep tests always run; the property tests only materialize when it is
+installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # property tests below are conditionally defined
+    hypothesis = None
 
 from repro.core import memory as fmem
 from repro.kernels import ops, ref
@@ -54,25 +62,26 @@ def test_expsum_kernel_sweep(shape, dtype):
                                atol=1e-5)
 
 
-@hypothesis.given(
-    n=st.integers(1, 3000),
-    T=st.integers(1, 24),
-    cursor=st.integers(0, 1000),
-    alpha=st.floats(0.0, 2.0),
-    beta=st.floats(0.0, 2.0),
-)
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_exact_kernel_property(n, T, cursor, alpha, beta):
-    rng = np.random.default_rng(n * 31 + T)
-    g = jnp.asarray(rng.normal(size=n), jnp.float32)
-    hist = jnp.asarray(rng.normal(size=(T, n)), jnp.float32)
-    w = jnp.asarray(fmem.mu_weights(T, 0.2), jnp.float32)
-    c = jnp.int32(cursor % T)
-    d1, h1 = ops.frodo_update(g, hist, c, w, alpha, beta)
-    d2, h2 = ref.frodo_update_ref(g, hist, c, w, alpha, beta)
-    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
-                               atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+if hypothesis is not None:
+    @hypothesis.given(
+        n=st.integers(1, 3000),
+        T=st.integers(1, 24),
+        cursor=st.integers(0, 1000),
+        alpha=st.floats(0.0, 2.0),
+        beta=st.floats(0.0, 2.0),
+    )
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_exact_kernel_property(n, T, cursor, alpha, beta):
+        rng = np.random.default_rng(n * 31 + T)
+        g = jnp.asarray(rng.normal(size=n), jnp.float32)
+        hist = jnp.asarray(rng.normal(size=(T, n)), jnp.float32)
+        w = jnp.asarray(fmem.mu_weights(T, 0.2), jnp.float32)
+        c = jnp.int32(cursor % T)
+        d1, h1 = ops.frodo_update(g, hist, c, w, alpha, beta)
+        d2, h2 = ref.frodo_update_ref(g, hist, c, w, alpha, beta)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
 
 
 def test_kernel_inside_jit_grad_free_update():

@@ -1,10 +1,18 @@
-"""Fractional-memory unit + property tests."""
-import hypothesis
-import hypothesis.strategies as st
+"""Fractional-memory unit + property tests.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt): the
+unit tests always run; the property tests only materialize when it is
+installed."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # property tests below are conditionally defined
+    hypothesis = None
 
 from repro.core import memory as fmem
 
@@ -17,12 +25,13 @@ def test_mu_weights_basic():
     assert np.all(w > 0)
 
 
-@hypothesis.given(lam=st.floats(0.01, 0.99), T=st.integers(1, 300))
-@hypothesis.settings(max_examples=50, deadline=None)
-def test_mu_weights_power_law(lam, T):
-    w = fmem.mu_weights(T, lam)
-    n = np.arange(1, T + 1)
-    np.testing.assert_allclose(w, n ** (lam - 1.0), rtol=1e-12)
+if hypothesis is not None:
+    @hypothesis.given(lam=st.floats(0.01, 0.99), T=st.integers(1, 300))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_mu_weights_power_law(lam, T):
+        w = fmem.mu_weights(T, lam)
+        n = np.arange(1, T + 1)
+        np.testing.assert_allclose(w, n ** (lam - 1.0), rtol=1e-12)
 
 
 def test_mu_weights_validation():
@@ -97,23 +106,24 @@ def test_expsum_recurrence_matches_kernel_sum():
         acc = fmem.expsum_push(acc, rates, jnp.asarray(g))
 
 
-@hypothesis.given(st.integers(2, 60), st.floats(0.05, 0.95))
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_expsum_vs_exact_memory_term(T, lam):
-    """On a fixed gradient stream the two representations agree to ~fit
-    error after T steps (exact truncates, expsum has a small tail)."""
-    rng = np.random.default_rng(2)
-    K = 10
-    rates, coeffs = fmem.fit_expsum(T, lam, K)
-    w = jnp.asarray(fmem.mu_weights(T, lam), jnp.float32)
-    hist = jnp.zeros((T, 3), jnp.float32)
-    acc = jnp.zeros((K, 3), jnp.float32)
-    for t in range(T):
-        g = jnp.asarray(rng.normal(size=3), jnp.float32)
-        hist = fmem.exact_push(hist, jnp.int32(t % T), g)
-        acc = fmem.expsum_push(acc, jnp.asarray(rates, jnp.float32), g)
-    M_exact = fmem.exact_memory_term(hist, jnp.int32(T % T), w)
-    M_exp = fmem.expsum_memory_term(acc, jnp.asarray(coeffs, jnp.float32))
-    denom = float(jnp.linalg.norm(M_exact)) + 1e-6
-    rel = float(jnp.linalg.norm(M_exp - M_exact)) / denom
-    assert rel < 0.15, rel
+if hypothesis is not None:
+    @hypothesis.given(st.integers(2, 60), st.floats(0.05, 0.95))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_expsum_vs_exact_memory_term(T, lam):
+        """On a fixed gradient stream the two representations agree to ~fit
+        error after T steps (exact truncates, expsum has a small tail)."""
+        rng = np.random.default_rng(2)
+        K = 10
+        rates, coeffs = fmem.fit_expsum(T, lam, K)
+        w = jnp.asarray(fmem.mu_weights(T, lam), jnp.float32)
+        hist = jnp.zeros((T, 3), jnp.float32)
+        acc = jnp.zeros((K, 3), jnp.float32)
+        for t in range(T):
+            g = jnp.asarray(rng.normal(size=3), jnp.float32)
+            hist = fmem.exact_push(hist, jnp.int32(t % T), g)
+            acc = fmem.expsum_push(acc, jnp.asarray(rates, jnp.float32), g)
+        M_exact = fmem.exact_memory_term(hist, jnp.int32(T % T), w)
+        M_exp = fmem.expsum_memory_term(acc, jnp.asarray(coeffs, jnp.float32))
+        denom = float(jnp.linalg.norm(M_exact)) + 1e-6
+        rel = float(jnp.linalg.norm(M_exp - M_exact)) / denom
+        assert rel < 0.15, rel

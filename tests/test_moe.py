@@ -38,6 +38,7 @@ def _dense_reference(params, x, cfg):
     return outs.reshape(B, S, d)
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_reference():
     cfg = _cfg(cf=8.0)          # capacity large enough: no drops
     params = MOE.moe_init(jax.random.key(0), cfg)
@@ -49,6 +50,7 @@ def test_moe_matches_dense_reference():
     assert float(aux) >= 0
 
 
+@pytest.mark.slow
 def test_capacity_dropping_reduces_output_norm():
     """With tiny capacity most assignments drop; outputs shrink, no NaN."""
     cfg_big = _cfg(cf=8.0)
@@ -63,6 +65,7 @@ def test_capacity_dropping_reduces_output_norm():
         np.linalg.norm(np.asarray(out_big))
 
 
+@pytest.mark.slow
 def test_shared_expert_added():
     cfg = _cfg()
     cfg = cfg.replace(moe=MoEConfig(n_experts=4, top_k=2, expert_d_ff=32,
@@ -80,6 +83,7 @@ def test_shared_expert_added():
     assert float(jnp.abs(out - out2).max()) > 1e-5
 
 
+@pytest.mark.slow
 def test_load_balance_loss_uniform_router_is_one():
     """With a uniform router, E * sum(me*ce) -> ~1 (its minimum)."""
     cfg = _cfg(E=8, k=2)
@@ -93,6 +97,7 @@ def test_load_balance_loss_uniform_router_is_one():
     assert lb_est == pytest.approx(1.0 + 0.001 * np.log(8) ** 2, rel=0.2)
 
 
+@pytest.mark.slow
 def test_moe_grad_flows_through_dispatch():
     cfg = _cfg()
     params = MOE.moe_init(jax.random.key(4), cfg)

@@ -29,6 +29,7 @@ def test_chunked_ce_matches_plain():
                                    float(mref["accuracy"]), rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_chunked_ce_grads_match():
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(1, 8, 6)), jnp.float32)
@@ -60,6 +61,7 @@ def _moe_cfg(groups):
                        param_dtype="float32", compute_dtype="float32")
 
 
+@pytest.mark.slow
 def test_grouped_dispatch_matches_ungrouped():
     """With ample capacity, dispatch_groups must not change the math."""
     params = MOE.moe_init(jax.random.key(0), _moe_cfg(1))
@@ -72,6 +74,7 @@ def test_grouped_dispatch_matches_ungrouped():
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_consensus_interval_skips_mixing():
     cfg = REG.get_smoke_config("mamba2-780m")
     tc = TrainConfig(T=4, memory_mode="exact", remat=False,
@@ -100,11 +103,10 @@ def test_consensus_interval_skips_mixing():
 
 def test_serve_rules_weights_fsdp():
     import jax as j
-    from jax.sharding import AxisType
+    from repro.launch.mesh import make_mesh_auto
     if len(j.devices()) < 1:
         pytest.skip("no devices")
-    mesh = j.make_mesh((1, 1), ("data", "model"),
-                       axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh_auto((1, 1), ("data", "model"))
     cfg = REG.get_config("kimi-k2-1t-a32b")
     r0 = serve_rules(cfg, False, 128, mesh)
     assert r0["fsdp"] is None

@@ -29,7 +29,9 @@ def _naive_ssd(x, dA, Bm, Cm):
     return ys, h
 
 
-@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize(
+    "chunk", [pytest.param(4, marks=pytest.mark.slow), 8,
+              pytest.param(16, marks=pytest.mark.slow)])
 def test_ssd_chunked_matches_recurrence(chunk):
     rng = np.random.default_rng(0)
     B, Sq, H, P, G, N = 2, 16, 4, 3, 2, 5
@@ -51,6 +53,7 @@ def _ssm_cfg():
                        param_dtype="float32", compute_dtype="float32")
 
 
+@pytest.mark.slow
 def test_mamba_decode_matches_block():
     cfg = _ssm_cfg()
     params = S.mamba_init(jax.random.key(0), cfg)
@@ -98,6 +101,7 @@ def _hybrid_cfg():
                        param_dtype="float32", compute_dtype="float32")
 
 
+@pytest.mark.slow
 def test_rglru_block_decode_matches():
     cfg = _hybrid_cfg()
     params = R.rglru_init(jax.random.key(1), cfg)

@@ -61,6 +61,7 @@ def test_clip_by_global_norm():
                                                                  rel=1e-5)
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip(tmp_path):
     cfg = REG.get_smoke_config("mamba2-780m")
     tc = TrainConfig(T=4, memory_mode="exact")
