@@ -253,13 +253,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sets", type=int, default=100)
     ap.add_argument("--circle", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for the hyperparameter sweep and circle "
+                         "starts; same seed -> identical JSONL (mod timing)")
     ap.add_argument("--out", default="experiments/exp1_quadratic.json")
     ap.add_argument("--metrics-out",
                     default="experiments/exp1_metrics.jsonl",
                     help="per-step telemetry JSONL ('' disables)")
     ap.add_argument("--metrics-steps", type=int, default=600)
     args = ap.parse_args()
-    print(json.dumps(run_experiment(args.sets, args.circle, out=args.out,
+    print(json.dumps(run_experiment(args.sets, args.circle, seed=args.seed,
+                                    out=args.out,
                                     metrics_out=args.metrics_out or None,
                                     metrics_steps=args.metrics_steps),
                      indent=1))

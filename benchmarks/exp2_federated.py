@@ -148,27 +148,31 @@ def steps_to_loss(losses: np.ndarray, target: float) -> int:
     return int(hit[0]) if hit.size else len(losses)
 
 
-def run_experiment(steps=300, n_seeds=5, out=None, metrics_out=None):
+def run_experiment(steps=300, n_seeds=5, out=None, metrics_out=None, seed=0):
+    """``seed`` offsets every per-run seed (data shards, inits, batch order):
+    run s uses ``seed + s``, so a fixed ``--seed`` reproduces the JSONL
+    byte-for-byte (modulo wall-clock ``step_time_ms``)."""
     methods = ("frodo", "gd", "nesterov", "heavy_ball", "adam")
     curves = {m: [] for m in methods}
     sink = obs.JsonlSink(metrics_out) if metrics_out else None
     for m in methods:
         for s in range(n_seeds):
-            # seed 0 carries the per-step telemetry trace when requested
+            run_seed = seed + s
+            # the first run carries the per-step telemetry trace
             if sink is not None and s == 0:
-                losses, accs, tel = run_one(m, seed=s, steps=steps,
+                losses, accs, tel = run_one(m, seed=run_seed, steps=steps,
                                             telemetry=True)
                 ms = tel.pop("step_time_ms")
                 for k in range(steps):
                     sink.write({"exp": "exp2_federated", "method": m,
-                                "seed": s, "step": k,
+                                "seed": run_seed, "step": k,
                                 "loss": float(losses[k]),
                                 "acc": float(accs[k]),
                                 "step_time_ms": round(ms, 4),
                                 **{kk: float(a[k])
                                    for kk, a in tel.items()}})
             else:
-                losses, accs = run_one(m, seed=s, steps=steps)
+                losses, accs = run_one(m, seed=run_seed, steps=steps)
             curves[m].append((losses, accs))
     if sink is not None:
         sink.close()
@@ -200,13 +204,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed; run s uses seed+s for data/init/batches")
     ap.add_argument("--out", default="experiments/exp2_federated.json")
     ap.add_argument("--metrics-out",
                     default="experiments/exp2_metrics.jsonl",
                     help="per-step telemetry JSONL ('' disables)")
     args = ap.parse_args()
     print(json.dumps(run_experiment(args.steps, args.seeds, out=args.out,
-                                    metrics_out=args.metrics_out or None),
+                                    metrics_out=args.metrics_out or None,
+                                    seed=args.seed),
                      indent=1))
 
 

@@ -35,9 +35,9 @@ def traffic_model(n, T=None, K=None, itemsize=4):
     return fused, unfused
 
 
-def rows():
+def rows(seed=0):
     out = []
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     for n in (1 << 14, 1 << 17):
         T, K = 32, 8
         g = jnp.asarray(rng.normal(size=n), jnp.float32)

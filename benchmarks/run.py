@@ -11,13 +11,16 @@ Full-protocol runs: ``python benchmarks/exp1_quadratic.py`` (100 sets) and
 ``python benchmarks/exp2_federated.py`` (5 seeds, 300 steps); this harness
 uses reduced sizes so the whole suite stays CPU-friendly.
 
-``--jsonl PATH`` mirrors every row into PATH via ``obs.JsonlSink`` — the
-same sink the trainers and experiment scripts use, so BENCH_*.json
-trajectories come from one code path.
+``--metrics-out PATH`` (alias: ``--jsonl PATH``) mirrors every row into
+PATH via ``obs.JsonlSink`` — the same sink the trainers and experiment
+scripts use, so BENCH_*.json trajectories come from one code path.
+``--seed N`` is threaded uniformly into every sub-benchmark (exp1 sweep,
+exp2 runs, consensus/kernel input tensors), so two invocations with the
+same seed produce identical derived numbers (modulo wall-clock timings).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 import jax
@@ -38,10 +41,10 @@ def _row(name, us, derived):
     obs.record(name, us, derived=derived)
 
 
-def bench_exp1():
+def bench_exp1(seed=0):
     from benchmarks.exp1_quadratic import run_experiment
     t0 = time.perf_counter()
-    s = run_experiment(n_sets=25, n_circle=25, out=None)
+    s = run_experiment(n_sets=25, n_circle=25, seed=seed, out=None)
     us = (time.perf_counter() - t0) * 1e6
     frac = s["fractional"]["circle_mean"]
     hb = s["heavy_ball"]["circle_mean"]
@@ -55,10 +58,10 @@ def bench_exp1():
     _row("exp1_ks_frac_beats_no_memory", 0.0, f"p={p:.2e}")
 
 
-def bench_exp2():
+def bench_exp2(seed=0):
     from benchmarks.exp2_federated import run_experiment
     t0 = time.perf_counter()
-    s = run_experiment(steps=200, n_seeds=2, out=None)
+    s = run_experiment(steps=200, n_seeds=2, out=None, seed=seed)
     us = (time.perf_counter() - t0) * 1e6
     for m in ("frodo", "gd", "nesterov", "heavy_ball", "adam"):
         steps = s[m]["steps_to_gd_final"][0]
@@ -69,15 +72,15 @@ def bench_exp2():
          f"{s['speedup_vs_heavy_ball']:.2f}x")
 
 
-def bench_kernels():
+def bench_kernels(seed=0):
     from benchmarks.kernel_bench import rows
-    for name, us, derived in rows():
+    for name, us, derived in rows(seed=seed):
         _row(name, us, derived)
 
 
-def bench_consensus():
+def bench_consensus(seed=0):
     from repro.core import consensus as C, graph as G
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     for A in (8, 32):
         x = {"p": jnp.asarray(rng.normal(size=(A, 1 << 16)), jnp.float32)}
         for name, W in (
@@ -98,7 +101,8 @@ def bench_consensus():
             _row(f"consensus_{name}_A{A}", us, f"model_bytes={comm}")
 
 
-def bench_ablations():
+def bench_ablations(seed=0):
+    del seed  # deterministic sweep; accepted for uniform dispatch
     from benchmarks.ablations import expsum_K
     rows = expsum_K()
     exact = rows.pop("exact_T90")
@@ -108,7 +112,8 @@ def bench_ablations():
              f"iters={v['iters']},fit={v['fit_rel_l2']:.1e}")
 
 
-def bench_roofline():
+def bench_roofline(seed=0):
+    del seed  # replays recorded artifacts; accepted for uniform dispatch
     import os
     if not os.path.isdir("experiments/dryrun"):
         _row("roofline", 0.0, "no dryrun artifacts; run repro.launch.dryrun")
@@ -127,22 +132,29 @@ def bench_roofline():
     _row("roofline_pairs_analyzed", 0.0, f"count={ok}")
 
 
+BENCHES = {"exp1": bench_exp1, "exp2": bench_exp2,
+           "kernels": bench_kernels, "consensus": bench_consensus,
+           "roofline": bench_roofline, "ablations": bench_ablations}
+
+
 def main() -> None:
-    argv = sys.argv[1:]
-    if "--jsonl" in argv:
-        i = argv.index("--jsonl")
-        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
-            sys.exit("error: --jsonl requires a path")
-        obs.set_sink(obs.JsonlSink(argv[i + 1]))
-        argv = argv[:i] + argv[i + 2:]
-    which = argv or ["kernels", "consensus", "exp1", "exp2",
-                     "ablations", "roofline"]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("which", nargs="*", choices=[[], *BENCHES],
+                    help="benchmarks to run (default: all)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed threaded into every sub-benchmark")
+    ap.add_argument("--metrics-out", "--jsonl", dest="metrics_out",
+                    default=None, metavar="PATH",
+                    help="mirror rows into PATH via obs.JsonlSink")
+    args = ap.parse_args()
+    if args.metrics_out:
+        obs.set_sink(obs.JsonlSink(args.metrics_out))
+    which = args.which or ["kernels", "consensus", "exp1", "exp2",
+                           "ablations", "roofline"]
     print("name,us_per_call,derived")
     try:
         for w in which:
-            {"exp1": bench_exp1, "exp2": bench_exp2,
-             "kernels": bench_kernels, "consensus": bench_consensus,
-             "roofline": bench_roofline, "ablations": bench_ablations}[w]()
+            BENCHES[w](seed=args.seed)
     finally:
         obs.set_sink(None).close()
 

@@ -14,12 +14,18 @@ from repro.obs.metrics import (JsonlSink, MemorySink, MetricsSink, NullSink,
                                get_sink, global_norm, read_jsonl, record,
                                scalarize, set_sink, tree_sq_sum,
                                zeros_like_metrics)
+from repro.obs.regress import (MetricDiff, Tolerance, compare_to_baseline,
+                               format_report, load_baseline,
+                               load_trajectories, make_baseline,
+                               write_baseline)
 from repro.obs.timing import (StepTimer, annotate, step_annotation,
                               trace_scope)
 
 __all__ = [
-    "JsonlSink", "MemorySink", "MetricsSink", "NullSink", "StepTimer",
-    "annotate", "consensus_error", "frodo_step_metrics", "get_sink",
-    "global_norm", "read_jsonl", "record", "scalarize", "set_sink",
-    "step_annotation", "trace_scope", "tree_sq_sum", "zeros_like_metrics",
+    "JsonlSink", "MemorySink", "MetricDiff", "MetricsSink", "NullSink",
+    "StepTimer", "Tolerance", "annotate", "compare_to_baseline",
+    "consensus_error", "format_report", "frodo_step_metrics", "get_sink",
+    "global_norm", "load_baseline", "load_trajectories", "make_baseline",
+    "read_jsonl", "record", "scalarize", "set_sink", "step_annotation",
+    "trace_scope", "tree_sq_sum", "write_baseline", "zeros_like_metrics",
 ]

@@ -95,14 +95,23 @@ class JsonlSink:
         self.close()
 
 
-def read_jsonl(path: str) -> List[Dict[str, Any]]:
-    """Load a JSONL metrics file back into a list of records."""
+def read_jsonl(path: str, strict: bool = False) -> List[Dict[str, Any]]:
+    """Load a JSONL metrics file back into a list of records.
+
+    Malformed lines (a run killed mid-write leaves a torn last line) are
+    skipped by default; ``strict=True`` raises on the first bad line.
+    """
     out = []
     with open(path) as f:
         for line in f:
             line = line.strip()
-            if line:
+            if not line:
+                continue
+            try:
                 out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if strict:
+                    raise
     return out
 
 

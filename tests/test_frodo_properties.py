@@ -1,0 +1,119 @@
+"""Property tests for FrODO memory semantics (Algorithm 1, stage 2).
+
+Two claims the regression harness leans on:
+
+* the fractional weights mu(n; lambda) decay monotonically over the window
+  (the memory term is a fading, not amplifying, influence), and
+* with the memory disabled (beta = 0) FrODO *is* distributed GD — the
+  update path matches the ``no_memory`` baseline step-for-step, so the
+  exp1/exp2 "no memory" curves really are the DGD control.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt): the
+unit tests always run; the property tests only materialize when it is
+installed (same pattern as tests/test_memory.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # property tests below are conditionally defined
+    hypothesis = None
+
+from repro.core import memory as fmem
+from repro.core.baselines import REGISTRY
+from repro.core.frodo import FrodoConfig, frodo
+
+
+def _grad_stream(seed, steps, shape=(3,)):
+    rng = np.random.default_rng(seed)
+    return [{"w": jnp.asarray(rng.normal(size=shape), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(2,)), jnp.float32)}
+            for _ in range(steps)]
+
+
+def _run_steps(opt, grads):
+    state = opt.init(grads[0])
+    deltas = []
+    for g in grads:
+        d, state = opt.update(g, state, None)
+        deltas.append(d)
+    return deltas
+
+
+def assert_matches_dgd(cfg, steps=5, seed=0):
+    """beta=0 FrODO deltas == -alpha*g, the no_memory (DGD) baseline."""
+    grads = _grad_stream(seed, steps)
+    d_frodo = _run_steps(frodo(cfg), grads)
+    d_dgd = _run_steps(REGISTRY["no_memory"](alpha=cfg.alpha), grads)
+    for k, (df, dd) in enumerate(zip(d_frodo, d_dgd)):
+        for leaf_f, leaf_d in zip(jax.tree.leaves(df), jax.tree.leaves(dd)):
+            np.testing.assert_allclose(np.asarray(leaf_f),
+                                       np.asarray(leaf_d),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"step {k}")
+
+
+def test_beta_zero_exact_matches_dgd():
+    assert_matches_dgd(FrodoConfig(alpha=0.3, beta=0.0, lam=0.15, T=7,
+                                   memory_mode="exact"))
+
+
+def test_beta_zero_expsum_matches_dgd():
+    assert_matches_dgd(FrodoConfig(alpha=0.3, beta=0.0, lam=0.15, T=7, K=4,
+                                   memory_mode="expsum"))
+
+
+def test_mu_weights_monotone_decay_basic():
+    for lam in (0.1, 0.5, 0.9):
+        w = fmem.mu_weights(100, lam)
+        assert w[0] == 1.0
+        assert np.all(np.diff(w) < 0)
+        assert np.all((w > 0) & (w <= 1.0))
+
+
+if hypothesis is not None:
+    @hypothesis.given(lam=st.floats(0.01, 0.99), T=st.integers(2, 200),
+                      scale=st.sampled_from([1.0, 2.0]))
+    @hypothesis.settings(max_examples=50, deadline=None)
+    def test_mu_weights_monotone_decay(lam, T, scale):
+        """mu(1) = 1 and mu strictly decays over the whole window, for any
+        fractional order and either exponent-scale reading of the paper."""
+        w = fmem.mu_weights(T, lam, exponent_scale=scale)
+        assert w[0] == 1.0
+        assert np.all(np.diff(w) < 0)
+        assert np.all((w > 0) & (w <= 1.0))
+
+    @hypothesis.given(alpha=st.floats(0.01, 1.0), lam=st.floats(0.05, 0.95),
+                      T=st.integers(1, 6),
+                      mode=st.sampled_from(["exact", "expsum"]),
+                      seed=st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=15, deadline=None)
+    def test_beta_zero_matches_dgd_property(alpha, lam, T, mode, seed):
+        """Disabling the memory (beta=0) reduces FrODO to DGD step-for-step
+        regardless of alpha / lambda / T / memory representation."""
+        assert_matches_dgd(FrodoConfig(alpha=alpha, beta=0.0, lam=lam, T=T,
+                                       K=3, memory_mode=mode),
+                           steps=4, seed=seed)
+
+    @hypothesis.given(lam=st.floats(0.05, 0.95), seed=st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_t1_memory_is_previous_gradient(lam, seed):
+        """At T=1 the memory term is exactly the previous gradient (mu(1)=1
+        for every lambda) — the heavy-ball degeneration exp1/exp2 bench."""
+        alpha, beta = 0.4, 0.2
+        grads = _grad_stream(seed, 4)
+        deltas = _run_steps(frodo(FrodoConfig(alpha=alpha, beta=beta,
+                                              lam=lam, T=1,
+                                              memory_mode="exact")), grads)
+        for k in range(1, len(grads)):
+            expect = jax.tree.map(
+                lambda g, gp: -(alpha * g + beta * gp),
+                grads[k], grads[k - 1])
+            for le, lg in zip(jax.tree.leaves(expect),
+                              jax.tree.leaves(deltas[k])):
+                np.testing.assert_allclose(np.asarray(lg), np.asarray(le),
+                                           rtol=1e-6, atol=1e-7)

@@ -43,6 +43,48 @@ def test_jsonl_sink_append_mode(tmp_path):
     assert [r["step"] for r in M.read_jsonl(path)] == [0, 1]
 
 
+def test_jsonl_sink_empty_run(tmp_path):
+    """A run that opens a sink and writes nothing still leaves a readable
+    (empty) file — downstream tooling sees [] rather than ENOENT."""
+    path = str(tmp_path / "empty.jsonl")
+    with M.JsonlSink(path):
+        pass
+    assert M.read_jsonl(path) == []
+    # double-close is harmless (context-manager + explicit close)
+    sink = M.JsonlSink(path)
+    sink.close()
+    sink.close()
+    assert M.read_jsonl(path) == []
+
+
+def test_jsonl_sink_reopen_cycles(tmp_path):
+    """Append/reopen across 'processes': records accumulate in order, and a
+    final mode='w' reopen truncates (the benchmark-rerun contract)."""
+    path = str(tmp_path / "m.jsonl")
+    for step in range(3):
+        with M.JsonlSink(path, mode="a") as s:
+            s.write({"step": step})
+    assert [r["step"] for r in M.read_jsonl(path)] == [0, 1, 2]
+    with M.JsonlSink(path, mode="w") as s:
+        s.write({"step": 99})
+    assert [r["step"] for r in M.read_jsonl(path)] == [99]
+
+
+def test_read_jsonl_skips_malformed_lines(tmp_path):
+    """A run killed mid-write leaves a torn line; read-back skips it (and
+    any other garbage) by default, raises under strict=True."""
+    path = str(tmp_path / "torn.jsonl")
+    with open(path, "w") as f:
+        f.write('{"step": 0, "loss": 1.0}\n')
+        f.write('not json at all\n')
+        f.write('{"step": 1, "loss": 0.5}\n')
+        f.write('{"step": 2, "los')               # torn mid-record
+    rows = M.read_jsonl(path)
+    assert [r["step"] for r in rows] == [0, 1]
+    with pytest.raises(json.JSONDecodeError):
+        M.read_jsonl(path, strict=True)
+
+
 def test_memory_sink_and_default_record():
     sink = M.MemorySink()
     prev = M.set_sink(sink)

@@ -1,0 +1,242 @@
+"""Trajectory regression harness (src/repro/obs/regress.py).
+
+Tier-1: unit tests of loading/alignment/comparison on synthetic series.
+``-m regression``: end-to-end golden-run checks that record reduced-scale
+exp1/exp2 runs and diff them — the same code path CI's ``regression-check``
+job drives via ``benchmarks/regress.py --check``.
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.obs import regress as R
+
+# benchmarks/ is a namespace package rooted at the repo top level
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def rows_for(variant, metric_values, extra=None, timing=1.0):
+    rows = []
+    for step, v in enumerate(metric_values):
+        rows.append({"exp": "t", "variant": variant, "step": step,
+                     "consensus_error": v, "step_time_ms": timing,
+                     **(extra or {})})
+    return rows
+
+
+# ------------------------------------------------------------------- units
+
+def test_tolerance_validation():
+    with pytest.raises(ValueError):
+        R.Tolerance(rtol=-1.0)
+    with pytest.raises(ValueError):
+        R.Tolerance(max_violation_frac=1.5)
+    with pytest.raises(ValueError):
+        R.Tolerance(timing_ratio=0.0)
+
+
+def test_load_trajectories_groups_and_sorts():
+    rows = [
+        {"exp": "t", "variant": "a", "step": 1, "m": 10.0, "tag": "x",
+         "flag": True},
+        {"exp": "t", "variant": "a", "step": 0, "m": 5.0},
+        {"exp": "t", "variant": "b", "step": 0, "m": 7.0},
+    ]
+    out = R.load_trajectories(rows)
+    assert set(out) == {"exp=t/variant=a", "exp=t/variant=b"}
+    # sorted by step; strings and bools are not metrics
+    np.testing.assert_array_equal(out["exp=t/variant=a"]["m"], [5.0, 10.0])
+    assert set(out["exp=t/variant=a"]) == {"m"}
+    # rows with none of the group keys still load
+    assert "<ungrouped>" in R.load_trajectories([{"step": 0, "m": 1.0}])
+
+
+def test_align_length_mismatch():
+    a, b, err = R.align(np.arange(10.0), np.arange(10.0))
+    assert err == "" and len(a) == len(b) == 10
+    _, _, err = R.align(np.arange(10.0), np.arange(9.0))
+    assert "length mismatch" in err
+    # a tolerance fraction permits small truncation
+    a, b, err = R.align(np.arange(10.0), np.arange(9.0),
+                        max_length_frac=0.2)
+    assert err == "" and len(a) == len(b) == 9
+
+
+def test_compare_trajectory_identical_and_within_tolerance():
+    base = np.geomspace(1.0, 1e-8, 200)          # monotone decay
+    tol = R.Tolerance(rtol=0.05, atol=1e-6)
+    d = R.compare_trajectory("g", "ce", base, base.copy(), tol)
+    assert d.passed and d.max_abs_err == 0.0
+    # 3% relative wiggle everywhere: inside rtol
+    d = R.compare_trajectory("g", "ce", base, base * 1.03, tol)
+    assert d.passed
+    # float noise below the atol floor on fully-decayed points
+    noisy = base + 5e-7 * np.sign(np.sin(np.arange(200)))
+    assert R.compare_trajectory("g", "ce", base, noisy, tol).passed
+
+
+def test_compare_trajectory_drift_fails_with_report():
+    base = np.geomspace(1.0, 1e-3, 100)
+    cur = base.copy()
+    cur[40:] *= 1.5                               # curve flattens mid-run
+    d = R.compare_trajectory("g", "ce", base, cur,
+                             R.Tolerance(rtol=0.05, atol=1e-6))
+    assert not d.passed
+    assert d.violation_frac == pytest.approx(0.6)
+    assert "drift" in d.detail
+    # empty + length-mismatch failures
+    assert not R.compare_trajectory("g", "ce", np.array([]), np.array([]),
+                                    R.Tolerance()).passed
+    assert not R.compare_trajectory("g", "ce", base, base[:50],
+                                    R.Tolerance()).passed
+
+
+def test_compare_trajectory_violation_budget():
+    """A single spiked point survives the max_violation_frac budget."""
+    base = np.ones(100)
+    cur = base.copy()
+    cur[7] = 2.0
+    tol = R.Tolerance(rtol=0.05, atol=1e-6, max_violation_frac=0.02)
+    assert R.compare_trajectory("g", "m", base, cur, tol).passed
+    cur[8:10] = 2.0                               # 3 points > 2% budget
+    assert not R.compare_trajectory("g", "m", base, cur, tol).passed
+
+
+def test_compare_timing_one_sided_band():
+    tol = R.Tolerance(timing_ratio=2.0)
+    base = R.timing_percentiles(np.full(50, 10.0))
+    ok = R.compare_timing("g", "t", base, np.full(50, 15.0), tol)
+    assert ok.passed                              # 1.5x <= 2x
+    fast = R.compare_timing("g", "t", base, np.full(50, 1.0), tol)
+    assert fast.passed                            # speedups never fail
+    slow = R.compare_timing("g", "t", base, np.full(50, 25.0), tol)
+    assert not slow.passed and "2.0x" in slow.detail
+    # degenerate baselines skip rather than divide by zero
+    assert R.compare_timing("g", "t", {"p50": 0.0}, np.ones(3), tol).passed
+
+
+def test_make_baseline_series_vs_timing_split():
+    rows = rows_for("a", [1.0, 0.5, 0.25], timing=3.0)
+    doc = R.make_baseline(rows, meta={"exp": "t"})
+    assert doc["schema"] == R.BASELINE_SCHEMA
+    entry = doc["series"]["exp=t/variant=a"]
+    assert entry["metrics"]["consensus_error"] == [1.0, 0.5, 0.25]
+    # wall-clock timing is stored as percentiles, never as a series
+    assert "step_time_ms" not in entry["metrics"]
+    assert entry["timing"]["step_time_ms"]["p50"] == 3.0
+
+
+def test_write_baseline_byte_stable(tmp_path):
+    rows = rows_for("a", [1.0, 0.5])
+    p1, p2 = str(tmp_path / "b1.json"), str(tmp_path / "b2.json")
+    R.write_baseline(p1, R.make_baseline(rows, meta={"seed": 0}))
+    R.write_baseline(p2, R.make_baseline(list(rows), meta={"seed": 0}))
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+    loaded = R.load_baseline(p1)
+    assert loaded["meta"] == {"seed": 0}
+    # schema gate
+    (tmp_path / "bad.json").write_text(json.dumps({"schema": 99}))
+    with pytest.raises(ValueError, match="schema"):
+        R.load_baseline(str(tmp_path / "bad.json"))
+
+
+def test_compare_to_baseline_structure_rules():
+    base = R.make_baseline(rows_for("a", [1.0, 0.5, 0.25]))
+    # identical run passes, including the timing band
+    diffs = R.compare_to_baseline(base, rows_for("a", [1.0, 0.5, 0.25]))
+    assert diffs and all(d.passed for d in diffs)
+    # a vanished series is drift
+    diffs = R.compare_to_baseline(base, rows_for("b", [1.0, 0.5, 0.25]))
+    by = {(d.group, d.metric): d for d in diffs}
+    assert not by[("exp=t/variant=a", "*")].passed
+    assert by[("exp=t/variant=b", "*")].passed    # new series: informational
+    # a vanished metric is drift; an added metric is not
+    cur = rows_for("a", [1.0, 0.5, 0.25], extra={"new_metric": 7.0})
+    for r in cur:
+        del r["consensus_error"]
+    by = {(d.group, d.metric): d
+          for d in R.compare_to_baseline(base, cur)}
+    assert not by[("exp=t/variant=a", "consensus_error")].passed
+    assert by[("exp=t/variant=a", "new_metric")].passed
+    # --no-timing equivalent skips the band entirely
+    diffs = R.compare_to_baseline(base, rows_for("a", [1.0, 0.5, 0.25]),
+                                  include_timing=False)
+    assert all(d.kind != "timing" for d in diffs)
+
+
+def test_report_formats():
+    base = R.make_baseline(rows_for("a", [1.0, 0.5]))
+    diffs = R.compare_to_baseline(base, rows_for("a", [1.0, 0.9]),
+                                  tol=R.Tolerance(max_violation_frac=0.0))
+    txt = R.format_report(diffs)
+    assert "DRIFT" in txt and "consensus_error" in txt
+    doc = R.report_json(diffs)
+    assert doc["passed"] is False
+    assert doc["n_drifted"] >= 1
+    assert doc["n_checks"] == len(diffs) == len(doc["diffs"])
+    json.dumps(doc)                               # CI artifact must serialize
+
+
+# -------------------------------------------------- end-to-end golden runs
+
+@pytest.mark.regression
+def test_exp1_record_check_roundtrip_and_determinism(tmp_path):
+    from benchmarks import regress as cli
+    d1, d2 = str(tmp_path / "b1"), str(tmp_path / "b2")
+    cli.record("exp1", d1, seed=0, steps=60)
+    diffs = cli.check("exp1", d1, R.Tolerance(), seed=None, steps=None,
+                      include_timing=True)
+    assert diffs and all(d.passed for d in diffs), R.format_report(diffs)
+    # trajectories are byte-stable across recordings (timing is not)
+    cli.record("exp1", d2, seed=0, steps=60)
+    b1 = R.load_baseline(cli.baseline_path(d1, "exp1"))
+    b2 = R.load_baseline(cli.baseline_path(d2, "exp1"))
+    for label, entry in b1["series"].items():
+        assert entry["metrics"] == b2["series"][label]["metrics"]
+
+
+@pytest.mark.regression
+def test_exp1_perturbed_consensus_trajectory_drifts(tmp_path):
+    from benchmarks import regress as cli
+    bdir = str(tmp_path / "b")
+    cli.record("exp1", bdir, seed=0, steps=60)
+    path = cli.baseline_path(bdir, "exp1")
+    doc = R.load_baseline(path)
+    label = "exp=exp1_quadratic/variant=fractional"
+    ce = doc["series"][label]["metrics"]["consensus_error_pre_mix"]
+    doc["series"][label]["metrics"]["consensus_error_pre_mix"] = [
+        v * 1.5 for v in ce]
+    R.write_baseline(path, doc)
+    diffs = cli.check("exp1", bdir, R.Tolerance(), seed=None, steps=None,
+                      include_timing=False)
+    bad = [d for d in diffs if not d.passed]
+    assert bad and all(d.metric == "consensus_error_pre_mix" for d in bad)
+
+
+@pytest.mark.regression
+def test_committed_exp1_baseline_passes():
+    """The committed golden baseline matches the current tree (trajectories
+    only here; the timing band runs in CI where baseline and check share
+    hardware lineage)."""
+    from benchmarks import regress as cli
+    diffs = cli.check("exp1", cli.DEFAULT_BASELINE_DIR, R.Tolerance(),
+                      seed=None, steps=None, include_timing=False)
+    assert diffs and all(d.passed for d in diffs), R.format_report(diffs)
+
+
+@pytest.mark.regression
+def test_exp2_record_check_roundtrip(tmp_path):
+    from benchmarks import regress as cli
+    bdir = str(tmp_path / "b")
+    cli.record("exp2", bdir, seed=0, steps=6)
+    diffs = cli.check("exp2", bdir, R.Tolerance(), seed=None, steps=None,
+                      include_timing=True)
+    assert diffs and all(d.passed for d in diffs), R.format_report(diffs)
+    # every optimizer's telemetry made it into the baseline
+    doc = R.load_baseline(cli.baseline_path(bdir, "exp2"))
+    methods = {label.split("method=")[1].split("/")[0]
+               for label in doc["series"]}
+    assert methods == {"frodo", "gd", "nesterov", "heavy_ball", "adam"}
