@@ -37,7 +37,12 @@ DEFAULT_BASELINE_DIR = os.path.join(HERE, "baselines")
 
 # reduced-scale defaults: small enough for CI, long enough that the
 # convergence dynamics (memory ramp-up over T steps, consensus decay) show
-DEFAULT_STEPS = {"exp1": 150, "exp2": 40}
+DEFAULT_STEPS = {"exp1": 150, "exp2": 40, "exp3": 400, "train": 12}
+
+#: trainer sink counters that are pure wall-clock (monotone / machine
+#: dependent) — dropped from the train baseline; step_time_ms stays and is
+#: compared as a percentile band like every other timing key
+TRAIN_VOLATILE_KEYS = ("wall_s", "throughput_items_per_s")
 
 
 def run_exp1(jsonl_path: str, seed: int, steps: int) -> None:
@@ -52,7 +57,37 @@ def run_exp2(jsonl_path: str, seed: int, steps: int) -> None:
                    metrics_out=jsonl_path, seed=seed)
 
 
-RUNNERS = {"exp1": run_exp1, "exp2": run_exp2}
+def run_exp3(jsonl_path: str, seed: int, steps: int) -> None:
+    """Fault-injection sweep (benchmarks/exp3_faults.py) at reduced scale:
+    ``steps`` drives the quadratic arm; the federated arm and the recorded
+    trajectory window scale down with it."""
+    from benchmarks.exp3_faults import run_experiment
+    run_experiment(seed=seed, quad_steps=steps, fed_steps=max(steps // 8, 10),
+                   out=None, metrics_out=jsonl_path,
+                   metrics_steps=min(steps, 60))
+
+
+def run_train(jsonl_path: str, seed: int, steps: int) -> None:
+    """Smoke-scale ``launch.train --metrics-out`` golden run.  The trainer
+    sink has no group keys and mixes wall-clock counters into every record,
+    so the stream is rewritten: volatile counters out, series identity in."""
+    from repro.launch.train import run_training
+    raw = jsonl_path + ".raw"
+    run_training(arch="h2o-danube-1.8b", smoke=True, steps=steps,
+                 agents=2, metrics_out=raw, collect_metrics=True, seed=seed)
+    with open(raw) as src, open(jsonl_path, "w") as dst:
+        for line in src:
+            rec = json.loads(line)
+            for k in TRAIN_VOLATILE_KEYS:
+                rec.pop(k, None)
+            rec.update(exp="launch_train", name="h2o-danube-1.8b-smoke",
+                       seed=seed)
+            dst.write(json.dumps(rec) + "\n")
+    os.remove(raw)
+
+
+RUNNERS = {"exp1": run_exp1, "exp2": run_exp2, "exp3": run_exp3,
+           "train": run_train}
 
 
 def baseline_path(baseline_dir: str, exp: str) -> str:

@@ -2,8 +2,12 @@
 from repro.core.frodo import FrodoConfig, Optimizer, frodo, apply_updates
 from repro.core.baselines import (no_memory, heavy_ball, nesterov, adam,
                                   REGISTRY as OPTIMIZERS)
-from repro.core import memory, graph, consensus, theory, loop
+from repro.core.faults import (CompiledFaults, CrashWindow, FaultSchedule,
+                               FAULT_COUNTER_NAMES)
+from repro.core import memory, graph, consensus, faults, theory, loop
 
-__all__ = ["FrodoConfig", "Optimizer", "frodo", "apply_updates", "no_memory",
-           "heavy_ball", "nesterov", "adam", "OPTIMIZERS", "memory", "graph",
-           "consensus", "theory", "loop"]
+__all__ = ["CompiledFaults", "CrashWindow", "FAULT_COUNTER_NAMES",
+           "FaultSchedule", "FrodoConfig", "Optimizer", "frodo",
+           "apply_updates", "no_memory", "heavy_ball", "nesterov", "adam",
+           "OPTIMIZERS", "memory", "graph", "consensus", "faults", "theory",
+           "loop"]

@@ -36,8 +36,13 @@ def is_uniform_complete(W: np.ndarray, tol: float = 1e-9) -> bool:
 
 # ------------------------------------------------------------------ stacked
 
-def mix_stacked(x: Pytree, W: np.ndarray, with_metrics: bool = False):
+def mix_stacked(x: Pytree, W, with_metrics: bool = False):
     """x[a] <- sum_b W[a,b] x[b]   for every leaf (leading dim = agents).
+
+    ``W`` is either a host numpy matrix (the static healthy-graph path, with
+    the uniform-complete all-reduce shortcut) or a traced jax array — e.g.
+    one step of a fault-masked ``W_seq`` — which always takes the general
+    einsum (no data-dependent shortcuts under tracing).
 
     ``with_metrics=True`` additionally returns the aux scalar pytree
     ``{"consensus_error_pre", "consensus_error_post"}`` — the RMS per-agent
@@ -45,7 +50,7 @@ def mix_stacked(x: Pytree, W: np.ndarray, with_metrics: bool = False):
     default single-return path is byte-identical to a metrics-free build.
     """
     A = W.shape[0]
-    if is_uniform_complete(W):
+    if isinstance(W, np.ndarray) and is_uniform_complete(W):
         with trace_scope("consensus.mix_uniform"):
             out = jax.tree.map(
                 lambda v: jnp.broadcast_to(jnp.mean(v, axis=0, keepdims=True),
@@ -65,6 +70,20 @@ def mix_stacked(x: Pytree, W: np.ndarray, with_metrics: bool = False):
     aux = {"consensus_error_pre": obs_metrics.consensus_error(x),
            "consensus_error_post": obs_metrics.consensus_error(out)}
     return out, aux
+
+
+def mix_time_varying(x: Pytree, W_seq, step, with_metrics: bool = False):
+    """Fault-aware consensus: apply step ``step``'s matrix of a precompiled
+    (K, A, A) mixing sequence (``faults.CompiledFaults.W_seq``) to the
+    stacked states.  ``W_seq`` is baked into the jitted program as a
+    constant; ``step`` may be traced (a scan counter) — indexing selects the
+    round's masked, renormalized W_t.  Steps beyond the schedule horizon
+    wrap around (``step % K``), so a K-step schedule describes a repeating
+    fault pattern for longer runs."""
+    Wj = jnp.asarray(W_seq, jnp.float32)
+    W_t = Wj[jnp.mod(step, Wj.shape[0])]
+    with trace_scope("consensus.mix_time_varying"):
+        return mix_stacked(x, W_t, with_metrics=with_metrics)
 
 
 def mix_hierarchical(x: Pytree, W_intra: np.ndarray, W_pod: np.ndarray,

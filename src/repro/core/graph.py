@@ -138,6 +138,61 @@ def sigma(W: np.ndarray) -> float:
     return float(ev[-2]) if len(ev) > 1 else 0.0
 
 
+def dobrushin(W: np.ndarray) -> float:
+    """Dobrushin ergodicity coefficient tau(W) = 1/2 max_{i,j} ||W_i - W_j||_1.
+
+    For row-stochastic W, span(Wx) <= tau(W) * span(x); tau < 1 iff W is
+    *scrambling* (every pair of rows shares a positive column).  Unlike
+    ``sigma`` it certifies one-shot contraction for products of time-varying
+    matrices that share no common stationary vector — the right notion for
+    fault-masked mixing sequences."""
+    W = np.asarray(W, np.float64)
+    diffs = np.abs(W[:, None, :] - W[None, :, :]).sum(axis=-1)
+    return float(diffs.max() / 2.0)
+
+
+# ------------------------------------------------- time-varying sequences
+
+def window_product(W_seq: np.ndarray, start: int, length: int) -> np.ndarray:
+    """Backward product W_{start+length-1} @ ... @ W_{start} — the map one
+    window of time-varying mixing applies to the stacked agent states."""
+    P = np.eye(W_seq.shape[1])
+    for t in range(start, start + length):
+        P = W_seq[t] @ P
+    return P
+
+
+def windowed_sigma(W_seq: np.ndarray, B: int) -> np.ndarray:
+    """Dobrushin contraction factor of every length-B window product of a
+    (K, A, A) mixing sequence.  Values < 1 certify that per-agent
+    disagreement (span) strictly shrinks across the window."""
+    K = W_seq.shape[0]
+    if not (1 <= B <= K):
+        raise ValueError(f"window B={B} out of range for K={K} steps")
+    return np.asarray([dobrushin(window_product(W_seq, t, B))
+                       for t in range(K - B + 1)])
+
+
+def is_b_strongly_connected(W_seq: np.ndarray, B: int,
+                            tol: float = 1e-12) -> bool:
+    """Check the time-varying form of the paper's connectivity assumption:
+    every length-B window of the sequence must jointly restore strong
+    connectivity, i.e. the union graph of each window's supports is strongly
+    connected.  (With positive self-weights this is equivalent to the
+    window *product* having strongly connected support.)  A schedule that
+    passes keeps Thm 2.1-style contraction available at the window scale —
+    ``windowed_sigma(W_seq, B * (A - 1)) < 1`` — however many individual
+    steps are degraded."""
+    K, n = W_seq.shape[0], W_seq.shape[1]
+    if not (1 <= B <= K):
+        raise ValueError(f"window B={B} out of range for K={K} steps")
+    for t in range(K - B + 1):
+        union = (np.abs(W_seq[t:t + B]) > tol).any(axis=0)
+        if not is_strongly_connected(union.astype(np.float64)):
+            return False
+    return True
+
+
 def hierarchical_weights(W_pod: np.ndarray, W_intra: np.ndarray) -> np.ndarray:
     """Kronecker two-level mixing  W = W_pod (x) W_intra  — the multi-pod
     agent graph (pods over DCN, replicas inside a pod over ICI)."""

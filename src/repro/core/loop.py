@@ -21,11 +21,24 @@ from repro.core import consensus
 from repro.core.frodo import Optimizer, apply_updates
 
 
-def run_jax(objective, x0, opt, W, K, x_star=None):
-    """Pure-jax core of Algorithm 1 (vmappable).  Returns (xs, errors, f)."""
+def run_jax(objective, x0, opt, W, K, x_star=None, faults=None,
+            collect_metrics=False):
+    """Pure-jax core of Algorithm 1 (vmappable).  Returns (xs, errors, f)
+    — or (xs, errors, f, aux) with ``collect_metrics=True``, where ``aux``
+    carries per-round consensus error (pre/post mix).
+
+    ``faults`` (a ``faults.CompiledFaults``) switches consensus to the
+    schedule's per-step masked ``W_t`` (``W`` is then ignored) and applies
+    its update mask: inactive agents (stragglers, crashed) contribute a
+    zero gradient and a zero update for the round — the local state only
+    moves again once the mask reopens or a neighbor's mixing reaches it.
+    """
     N = x0.shape[0]
     agent_ids = jnp.arange(N)
     grad_fn = jax.vmap(jax.grad(objective), in_axes=(0, 0))
+    if faults is not None:
+        W_seq = jnp.asarray(faults.W_seq, jnp.float32)
+        u_seq = jnp.asarray(faults.update_mask, jnp.float32)
 
     def global_f(xs):                        # sum_i f_i(mean state)
         xbar = xs.mean(axis=0)
@@ -37,37 +50,79 @@ def run_jax(objective, x0, opt, W, K, x_star=None):
         def update(args):
             xs, opt_state = args
             g = grad_fn(xs, agent_ids)
+            if faults is not None:
+                u = u_seq[jnp.mod(k, u_seq.shape[0])]
+                g = g * u[:, None].astype(g.dtype)
             delta, opt_state = opt.update(g, opt_state, xs)
+            if faults is not None:
+                delta = jax.tree.map(
+                    lambda d: d * u[:, None].astype(d.dtype), delta)
             return apply_updates(xs, delta), opt_state
 
         xs, opt_state = jax.lax.cond(
             k > 0, update, lambda a: a, (xs, opt_state))
-        xs = consensus.mix_stacked(xs, W)
+        if faults is not None:
+            mixed = consensus.mix_time_varying(
+                xs, W_seq, k, with_metrics=collect_metrics)
+        else:
+            mixed = consensus.mix_stacked(xs, W,
+                                          with_metrics=collect_metrics)
+        aux = {}
+        if collect_metrics:
+            xs, caux = mixed
+            aux = {"consensus_error_pre_mix": caux["consensus_error_pre"],
+                   "consensus_error": caux["consensus_error_post"]}
+        else:
+            xs = mixed
 
         err = (jnp.mean(jnp.linalg.norm(xs - x_star[None], axis=-1))
                if x_star is not None else jnp.float32(0))
-        return (xs, opt_state), (err, global_f(xs))
+        out = (err, global_f(xs)) + ((aux,) if collect_metrics else ())
+        return (xs, opt_state), out
 
     opt_state = opt.init(x0)
-    (xs, _), (errs, fvals) = jax.lax.scan(
-        round_fn, (x0, opt_state), jnp.arange(K))
+    (xs, _), outs = jax.lax.scan(round_fn, (x0, opt_state), jnp.arange(K))
+    if collect_metrics:
+        errs, fvals, aux = outs
+        return xs, errs, fvals, aux
+    errs, fvals = outs
     return xs, errs, fvals
 
 
 def run(objective: Callable[[jax.Array, jax.Array], jax.Array],
         x0: jax.Array,                      # (N, n) initial agent states
         opt: Optimizer,
-        W: np.ndarray,                      # (N, N) row-stochastic mixing
+        W: Optional[np.ndarray],            # (N, N) row-stochastic mixing
         K: int,
         x_star: Optional[jax.Array] = None,
+        faults=None,                        # faults.CompiledFaults
+        collect_metrics: bool = False,
         ) -> dict:
     """Run K rounds of Algorithm 1.  Returns dict with final states and the
     per-round mean distance to x_star (if given) plus global-objective trace.
 
     ``objective(x, i)`` is agent i's private f_i evaluated at x (n,).
+
+    With ``faults`` set, consensus runs over the schedule's per-step
+    ``W_t`` and the result dict additionally carries the schedule's fault
+    counter trajectories (``faults_*``, truncated/cycled to K rounds);
+    ``collect_metrics=True`` adds per-round ``consensus_error`` /
+    ``consensus_error_pre_mix`` traces in either mode.
     """
-    xs, errs, fvals = run_jax(objective, x0, opt, W, K, x_star)
-    return {"x": xs, "errors": np.asarray(errs), "f": np.asarray(fvals)}
+    outs = run_jax(objective, x0, opt, W, K, x_star, faults=faults,
+                   collect_metrics=collect_metrics)
+    if collect_metrics:
+        xs, errs, fvals, aux = outs
+    else:
+        xs, errs, fvals = outs
+    result = {"x": xs, "errors": np.asarray(errs), "f": np.asarray(fvals)}
+    if collect_metrics:
+        result.update({k: np.asarray(v) for k, v in aux.items()})
+    if faults is not None:
+        idx = np.arange(K) % faults.n_steps
+        result.update({k: np.asarray(v)[idx]
+                       for k, v in faults.counter_arrays().items()})
+    return result
 
 
 def iterations_to_tol(errors: np.ndarray, tol: float = 1e-6) -> int:

@@ -7,10 +7,60 @@ initializes — hence the env re-exec guard).
 
     PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
         --smoke --steps 20 --agents 4
+
+``run_training`` is the importable entry point (used by the golden-run
+regression harness, see benchmarks/regress.py): same seed -> same data
+stream, same init, same trajectories.
 """
 import argparse
 import os
 import sys
+
+
+def run_training(arch: str = "h2o-danube-1.8b", smoke: bool = True,
+                 steps: int = 20, agents: int = 2, seq: int = 128,
+                 batch_per_agent: int = 2, optimizer: str = "frodo",
+                 alpha: float = 0.02, beta: float = 0.008,
+                 lam: float = 0.15, T: int = 40,
+                 memory_mode: str = "exact", topology: str = "complete",
+                 consensus_interval: int = 1, ckpt_dir: str = "checkpoints",
+                 metrics_out: str = "", collect_metrics: bool = False,
+                 seed: int = 0):
+    """Run the training loop; returns the trainer (history attached).
+
+    ``seed`` threads through both the parameter init and the synthetic
+    token pipeline, so a fixed seed gives deterministic loss/grad-norm
+    trajectories (the launch-train golden baseline relies on this).
+    """
+    from repro import obs
+    from repro.configs import registry as REG
+    from repro.data.synthetic import TokenPipeline, augment_modalities
+    from repro.training.trainer import Trainer
+    from repro.training.train_step import TrainConfig
+
+    cfg = REG.get_smoke_config(arch) if smoke else REG.get_config(arch)
+    collect = collect_metrics or bool(metrics_out)
+    tc = TrainConfig(optimizer=optimizer, alpha=alpha, beta=beta,
+                     lam=lam, T=T, memory_mode=memory_mode, remat=not smoke,
+                     topology=topology,
+                     consensus_interval=consensus_interval,
+                     collect_metrics=collect)
+    sink = obs.JsonlSink(metrics_out) if metrics_out else None
+    tokens_per_step = agents * batch_per_agent * seq
+    trainer = Trainer(cfg, tc, n_agents=agents,
+                      ckpt_dir=ckpt_dir, log_every=5, sink=sink,
+                      tokens_per_step=tokens_per_step)
+    state = trainer.init(seed=seed)
+    data = augment_modalities(
+        iter(TokenPipeline(vocab=cfg.vocab, seq_len=seq,
+                           batch_per_agent=batch_per_agent,
+                           n_agents=agents, seed=seed)), cfg)
+    try:
+        trainer.run(state, data, steps)
+    finally:
+        if sink is not None:
+            sink.close()
+    return trainer
 
 
 def main():
@@ -33,6 +83,8 @@ def main():
     ap.add_argument("--consensus-interval", type=int, default=1)
     ap.add_argument("--force-devices", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds init + data stream (deterministic run)")
     ap.add_argument("--metrics-out", default="",
                     help="JSONL path for per-step telemetry (implies "
                          "--collect-metrics)")
@@ -45,36 +97,15 @@ def main():
             f"--xla_force_host_platform_device_count={args.force_devices}")
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
-    from repro import obs
-    from repro.configs import registry as REG
-    from repro.data.synthetic import TokenPipeline, augment_modalities
-    from repro.training.trainer import Trainer
-    from repro.training.train_step import TrainConfig
-
-    cfg = (REG.get_smoke_config(args.arch) if args.smoke
-           else REG.get_config(args.arch))
-    collect = args.collect_metrics or bool(args.metrics_out)
-    tc = TrainConfig(optimizer=args.optimizer, alpha=args.alpha,
-                     beta=args.beta, lam=args.lam, T=args.T,
-                     memory_mode=args.memory_mode, remat=not args.smoke,
-                     topology=args.topology,
-                     consensus_interval=args.consensus_interval,
-                     collect_metrics=collect)
-    sink = obs.JsonlSink(args.metrics_out) if args.metrics_out else None
-    tokens_per_step = args.agents * args.batch_per_agent * args.seq
-    trainer = Trainer(cfg, tc, n_agents=args.agents,
-                      ckpt_dir=args.ckpt_dir, log_every=5, sink=sink,
-                      tokens_per_step=tokens_per_step)
-    state = trainer.init()
-    data = augment_modalities(
-        iter(TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
-                           batch_per_agent=args.batch_per_agent,
-                           n_agents=args.agents)), cfg)
-    try:
-        trainer.run(state, data, args.steps)
-    finally:
-        if sink is not None:
-            sink.close()
+    run_training(arch=args.arch, smoke=args.smoke, steps=args.steps,
+                 agents=args.agents, seq=args.seq,
+                 batch_per_agent=args.batch_per_agent,
+                 optimizer=args.optimizer, alpha=args.alpha, beta=args.beta,
+                 lam=args.lam, T=args.T, memory_mode=args.memory_mode,
+                 topology=args.topology,
+                 consensus_interval=args.consensus_interval,
+                 ckpt_dir=args.ckpt_dir, metrics_out=args.metrics_out,
+                 collect_metrics=args.collect_metrics, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import consensus as C
 from repro.core import graph as G
+from repro.core.faults import FaultSchedule
 from repro.core.frodo import FrodoConfig, Optimizer, apply_updates, frodo
 from repro.core import baselines
 from repro.distributed import sharding as SH
@@ -49,6 +50,11 @@ class TrainConfig:
     weights: str = "xiao_boyd"           # uniform|metropolis|xiao_boyd
     consensus_interval: int = 1          # mix every H steps (beyond-paper)
     cross_pod_period: int = 1            # hierarchical: DCN mixing period
+    # fault injection (core/faults.py): a schedule compiles to per-step
+    # masked mixing matrices + agent update masks, baked as constants over
+    # ``fault_horizon`` steps and cycled (step % horizon) beyond it
+    fault_schedule: Optional[FaultSchedule] = None
+    fault_horizon: int = 64
     # observability: emit consensus_error/memory_norm/... as extra scalar
     # outputs of train_step (drained to a sink by the trainer).  Static flag:
     # False lowers to a jaxpr byte-identical to a metrics-free build.
@@ -256,6 +262,23 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_agents: int,
     W, W_intra, W_pod = build_mixing(tc, n_agents, n_pods)
     loss_fn = make_loss_fn(cfg, tc)
 
+    faults = None
+    if tc.fault_schedule is not None and n_agents > 1:
+        if W is None:
+            raise ValueError("fault injection does not compose with the "
+                             "hierarchical topology (flatten to complete/"
+                             "ring, or drop the schedule)")
+        adj = {"complete": G.complete,
+               "ring": partial(G.ring, directed=False)}[tc.topology](n_agents)
+        # reuse the already-built weights so the healthy-step W is identical
+        # to the no-fault build
+        faults = tc.fault_schedule.compile(adj, tc.fault_horizon,
+                                           weight_fn=lambda _A: W)
+        fault_counters = {k: jnp.asarray(v)
+                          for k, v in faults.counter_arrays().items()}
+        fault_u = jnp.asarray(faults.update_mask, jnp.float32)
+        fault_W_seq = jnp.asarray(faults.W_seq, jnp.float32)
+
     def agent_grad_fn(params1, batch1):
         """Per-agent (loss, metrics), grads — microbatched grad accumulation
         when tc.microbatches > 1 (cuts activation memory ~linearly)."""
@@ -297,13 +320,30 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_agents: int,
         else:
             gnorm = jnp.float32(0)
 
+        if faults is not None:
+            # stragglers / crashed agents: gradient discarded and update
+            # withheld for the step (state moves only via consensus)
+            u_t = fault_u[jnp.mod(state.step, fault_u.shape[0])]
+
+            def agent_mask(t):
+                return jax.tree.map(
+                    lambda v: v * u_t.reshape(
+                        (n_agents,) + (1,) * (v.ndim - 1)).astype(v.dtype), t)
+
+            grads = agent_mask(grads)
+
         delta, opt_state = opt.update(grads, state.opt_state, state.params)
+        if faults is not None:
+            delta = agent_mask(delta)
         params = apply_updates(state.params, delta)
         pre_mix = params
 
         # stage 3: consensus over the agent dim
         if n_agents > 1:
             def mix(params):
+                if faults is not None:
+                    return C.mix_time_varying(params, fault_W_seq,
+                                              state.step)
                 if W is None:
                     return C.mix_hierarchical(params, W_intra, W_pod,
                                               state.step,
@@ -340,6 +380,10 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig, n_agents: int,
             out_metrics["consensus_error"] = obs_metrics.consensus_error(
                 params)
             out_metrics["param_norm"] = obs_metrics.global_norm(params)
+            if faults is not None:
+                t = jnp.mod(state.step, fault_u.shape[0])
+                out_metrics.update({k: v[t]
+                                    for k, v in fault_counters.items()})
         return new_state, out_metrics
 
     return train_step

@@ -1,0 +1,305 @@
+"""Tests for the fault-injection layer (core/faults.py) and its wiring
+into the consensus/loop/train paths.
+
+The contracts pinned here:
+
+* **determinism** — a ``FaultSchedule`` compiles to byte-identical arrays
+  every time (the exp3 golden baseline rides on this);
+* **degradation semantics** — masked rows stay row-stochastic; isolated
+  rows become ``e_i`` (local-step fallback); crashed agents freeze (row
+  AND column cut) and their staleness counters climb until rejoin;
+* **equivalences** — with every link dropped, the fault-aware loop is
+  byte-for-byte the local-only (identity-mixing) loop — the fault-layer
+  analogue of PR 7's "beta=0 == DGD" test;
+* **contraction** — schedules that pass the B-strong-connectivity check
+  have scrambling window products (windowed Dobrushin < 1), so per-agent
+  disagreement still dies under faults (Thm 2.1 at window scale).
+
+Deterministic tests always run; `hypothesis` widens the equivalence and
+contraction checks across hyperparameters when installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # property tests below are conditionally defined
+    hypothesis = None
+
+from repro.core import graph as G
+from repro.core import loop
+from repro.core.baselines import REGISTRY
+from repro.core.faults import (FAULT_COUNTER_NAMES, CompiledFaults,
+                               CrashWindow, FaultSchedule,
+                               mask_and_renormalize)
+from repro.core.frodo import FrodoConfig, frodo
+
+
+def _quad(x, i):
+    return 0.5 * jnp.sum((x - i) ** 2)
+
+
+def _compile(n=4, K=12, **kw):
+    sched = FaultSchedule(**kw)
+    return sched.compile(G.complete(n), K)
+
+
+# ------------------------------------------------------------ determinism
+
+def test_compile_is_byte_stable():
+    a = _compile(link_drop=0.4, straggler_frac=0.25, jitter_ms=3.0, seed=7)
+    b = _compile(link_drop=0.4, straggler_frac=0.25, jitter_ms=3.0, seed=7)
+    for field in ("W_seq", "update_mask", "links_dropped", "jitter_ms",
+                  "staleness"):
+        assert getattr(a, field).tobytes() == getattr(b, field).tobytes(), \
+            field
+    c = _compile(link_drop=0.4, straggler_frac=0.25, jitter_ms=3.0, seed=8)
+    assert a.W_seq.tobytes() != c.W_seq.tobytes()
+
+
+def test_counters_schema():
+    c = _compile(link_drop=0.3, seed=1)
+    rec = c.counters(0)
+    assert set(rec) == set(FAULT_COUNTER_NAMES)
+    arrs = c.counter_arrays()
+    assert set(arrs) == set(FAULT_COUNTER_NAMES)
+    for v in arrs.values():
+        assert v.shape == (c.n_steps,) and v.dtype == np.float32
+
+
+# ------------------------------------------------- degradation semantics
+
+def test_masked_rows_stay_stochastic_and_nonneg():
+    c = _compile(link_drop=0.5, seed=3, K=32)
+    np.testing.assert_allclose(c.W_seq.sum(axis=-1), 1.0, atol=1e-12)
+    assert c.W_seq.min() >= 0.0
+
+
+def test_isolated_row_is_local_fallback():
+    c = _compile(link_drop=1.0, K=4, seed=0)
+    for k in range(4):
+        np.testing.assert_array_equal(c.W_seq[k], np.eye(4))
+    assert (c.agents_isolated == 4).all()
+    assert (c.links_dropped == 12).all()        # all directed edges of K4
+    assert (c.steps_degraded() == 1).all()
+    # isolation degrades mixing but agents still update locally
+    assert (c.update_mask == 1.0).all()
+    assert (c.staleness == 0).all()
+
+
+def test_crash_freezes_row_and_column():
+    c = _compile(K=10, crashes=(CrashWindow(agent=1, start=3, stop=7),))
+    for k in range(10):
+        down = 3 <= k < 7
+        np.testing.assert_array_equal(
+            c.W_seq[k][1], np.eye(4)[1] if down else c.W_base[1])
+        # nobody listens to a crashed agent: column 1 off-diagonal is zero
+        col = c.W_seq[k][:, 1] * (1 - np.eye(4)[:, 1])
+        assert (col[np.arange(4) != 1] == 0).all() if down \
+            else (col[np.arange(4) != 1] > 0).all()
+        assert c.update_mask[k, 1] == (0.0 if down else 1.0)
+    # staleness climbs 1..4 through the window, resets on rejoin
+    np.testing.assert_array_equal(c.staleness[:, 1],
+                                  [0, 0, 0, 1, 2, 3, 4, 0, 0, 0])
+
+
+def test_stragglers_sampled_per_step():
+    c = _compile(straggler_frac=0.25, K=20, seed=5)
+    assert (c.update_mask.sum(axis=1) == 3.0).all()   # exactly one straggles
+    assert len({tuple(row) for row in c.update_mask}) > 1  # set varies
+    # stragglers still mix: W stays the healthy base matrix
+    np.testing.assert_array_equal(c.W_seq, np.broadcast_to(
+        c.W_base, c.W_seq.shape))
+
+
+def test_jitter_nonnegative_and_seeded():
+    c = _compile(jitter_ms=5.0, K=16, seed=2)
+    assert (c.jitter_ms >= 0).all() and c.jitter_ms.max() > 0
+
+
+def test_compile_rejects_negative_base_weights():
+    sched = FaultSchedule(link_drop=0.1)
+    with pytest.raises(ValueError, match="nonnegative"):
+        sched.compile(G.star(6), 4, weight_fn=G.xiao_boyd_weights)
+
+
+def test_mask_and_renormalize_direct():
+    W = G.uniform_weights(G.complete(3))
+    keep = np.ones((3, 3))
+    keep[0, 1] = keep[0, 2] = 0.0            # isolate agent 0
+    W_t, isolated = mask_and_renormalize(W, keep)
+    np.testing.assert_array_equal(W_t[0], [1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(isolated, [True, False, False])
+    np.testing.assert_allclose(W_t.sum(axis=1), 1.0)
+
+
+def test_validate_b_connectivity():
+    healthy = _compile(K=6)
+    assert healthy.validate(1)
+    # total blackout is never B-connected, for any window
+    dark = _compile(link_drop=1.0, K=6)
+    assert not dark.validate(6)
+
+
+# ----------------------------------------------------------- equivalences
+
+def _run_pair(method, drop_sched, n=4, K=15, alpha=0.3, beta=0.1):
+    if method == "frodo":
+        opt = frodo(FrodoConfig(alpha=alpha, beta=beta, lam=0.15, T=5))
+    else:
+        opt = REGISTRY["no_memory"](alpha=alpha)
+    x0 = jnp.asarray(np.random.default_rng(0).normal(size=(n, 3)),
+                     jnp.float32)
+    faults = drop_sched.compile(G.complete(n), K)
+    faulted = loop.run(_quad, x0, opt, None, K, faults=faults)
+    local = loop.run(_quad, x0, opt, np.eye(n), K)
+    return faulted, local
+
+
+def test_identity_mixing_is_byte_exact():
+    """A fully-degraded step's W_t is the identity, and einsum with the
+    identity (f32 HIGHEST) is exact: mixing must return the states
+    bit-for-bit — the isolated agent really takes a pure local step."""
+    import jax
+    from repro.core import consensus as C
+    c = _compile(link_drop=1.0, K=6, seed=0)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(4, 7)),
+                    jnp.float32)
+    mix = jax.jit(lambda v, k: C.mix_time_varying(v, c.W_seq, k))
+    for k in range(6):
+        assert np.asarray(mix(x, k)).tobytes() == np.asarray(x).tobytes()
+
+
+def test_all_links_dropped_equals_local_only():
+    """drop=1.0 masks every edge -> the fault-aware loop is the local-only
+    (identity-mixing) loop, the fault-layer mirror of the beta=0 == DGD
+    equivalence.  The linear GD path matches byte-for-byte; the FrODO path
+    is compared at the same tolerances as the PR 7 DGD-equivalence test
+    (its memory weighted-sum fuses differently across the two compiled
+    scans, costing ~2 ULPs)."""
+    faulted, local = _run_pair("gd", FaultSchedule(link_drop=1.0, seed=0))
+    assert np.asarray(faulted["x"]).tobytes() == \
+        np.asarray(local["x"]).tobytes()
+    assert faulted["f"].tobytes() == local["f"].tobytes()
+    faulted, local = _run_pair("frodo", FaultSchedule(link_drop=1.0, seed=0))
+    np.testing.assert_allclose(np.asarray(faulted["x"]),
+                               np.asarray(local["x"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_drop_zero_equals_healthy_loop():
+    """The control arm: an empty schedule must not perturb the healthy
+    path (same W every step)."""
+    n, K = 4, 12
+    opt = REGISTRY["no_memory"](alpha=0.2)
+    x0 = jnp.asarray(np.random.default_rng(1).normal(size=(n, 2)),
+                     jnp.float32)
+    W = G.uniform_weights(G.complete(n))
+    faults = FaultSchedule().compile(G.complete(n), K)
+    a = loop.run(_quad, x0, opt, None, K, faults=faults)
+    b = loop.run(_quad, x0, opt, W, K)
+    np.testing.assert_allclose(np.asarray(a["x"]), np.asarray(b["x"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_loop_reports_fault_counters():
+    c = FaultSchedule(link_drop=0.3, seed=0)
+    x0 = jnp.zeros((4, 2), jnp.float32)
+    res = loop.run(_quad, x0, REGISTRY["no_memory"](alpha=0.1), None, 8,
+                   faults=c.compile(G.complete(4), 8), collect_metrics=True)
+    for name in FAULT_COUNTER_NAMES:
+        assert name in res and res[name].shape == (8,)
+    assert "consensus_error" in res and "consensus_error_pre_mix" in res
+
+
+def test_train_step_fault_wiring():
+    """TrainConfig(fault_schedule=...) threads the compiled schedule into
+    the jitted LLM train step: fault counters ride the metrics dict, a
+    crashed agent's params freeze bit-exactly, healthy agents keep
+    training."""
+    import jax
+    from repro.configs import registry as REG
+    from repro.training.train_step import (TrainConfig, init_train_state,
+                                           make_train_step)
+    cfg = REG.get_smoke_config("h2o-danube-1.8b")
+    n = 2
+    sched = FaultSchedule(crashes=(CrashWindow(agent=1, start=0, stop=2),))
+    tc = TrainConfig(T=4, memory_mode="exact", remat=False, alpha=0.01,
+                     beta=0.004, fault_schedule=sched, fault_horizon=4,
+                     collect_metrics=True)
+    state = init_train_state(jax.random.key(0), cfg, tc, n)
+    step = jax.jit(make_train_step(cfg, tc, n))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab, (n, 2, 32)).astype(
+                 np.int32),
+             "labels": rng.integers(0, cfg.vocab, (n, 2, 32)).astype(
+                 np.int32)}
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    for name in FAULT_COUNTER_NAMES:
+        assert name in metrics, name
+    assert float(metrics["faults_staleness_max"]) == 1.0   # k=0: first miss
+    moved = False
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(state2.params)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_array_equal(a[1], b[1])          # crashed: frozen
+        moved |= bool(np.any(a[0] != b[0]))
+    assert moved                                           # healthy: trains
+
+
+def test_train_step_rejects_faults_on_hierarchical():
+    from repro.configs import registry as REG
+    from repro.training.train_step import TrainConfig, make_train_step
+    cfg = REG.get_smoke_config("h2o-danube-1.8b")
+    tc = TrainConfig(topology="hierarchical", remat=False,
+                     fault_schedule=FaultSchedule(link_drop=0.1))
+    with pytest.raises(ValueError, match="hierarchical"):
+        make_train_step(cfg, tc, n_agents=4, n_pods=2)
+
+
+# ------------------------------------------------------------ contraction
+
+def _windowed_contraction(compiled: CompiledFaults):
+    n = compiled.n_agents
+    B = next((b for b in range(1, 5) if compiled.validate(b)), None)
+    if B is None or B * (n - 1) > compiled.n_steps:
+        return None
+    return G.windowed_sigma(compiled.W_seq, B * (n - 1))
+
+
+def test_b_connected_schedule_contracts():
+    c = _compile(n=5, K=24, link_drop=0.4, seed=11)
+    taus = _windowed_contraction(c)
+    assert taus is not None, "40% drop on K5 should stay 1-connected"
+    assert (taus < 1.0).all()
+
+
+if hypothesis is not None:
+    @hypothesis.given(alpha=st.floats(0.05, 0.8), beta=st.floats(0.0, 0.4),
+                      method=st.sampled_from(["frodo", "gd"]),
+                      seed=st.integers(0, 2 ** 10))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_all_links_dropped_equals_local_only_property(alpha, beta,
+                                                          method, seed):
+        faulted, local = _run_pair(
+            method, FaultSchedule(link_drop=1.0, seed=seed),
+            alpha=alpha, beta=beta)
+        np.testing.assert_allclose(np.asarray(faulted["x"]),
+                                   np.asarray(local["x"]),
+                                   rtol=1e-6, atol=1e-7)
+
+    @hypothesis.given(n=st.integers(3, 8), drop=st.floats(0.0, 0.5),
+                      seed=st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_b_connected_schedules_contract_property(n, drop, seed):
+        """Whenever a compiled schedule passes the B-connectivity check,
+        its B*(n-1)-step window products are scrambling: tau < 1, so span
+        contracts regardless of where the drops landed."""
+        c = FaultSchedule(link_drop=drop, seed=seed).compile(
+            G.complete(n), 4 * n)
+        taus = _windowed_contraction(c)
+        hypothesis.assume(taus is not None)
+        assert (taus < 1.0).all()

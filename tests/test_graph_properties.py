@@ -1,0 +1,179 @@
+"""Property tests for the mixing-weight builders (core/graph.py).
+
+Invariants the consensus stage and the fault layer lean on:
+
+* every builder returns a row-stochastic W on every supported topology;
+* uniform / Metropolis weights are nonnegative (maskable — the fault
+  layer's per-edge renormalization requires it); Metropolis is further
+  symmetric and doubly stochastic;
+* on *regular* topologies the Xiao-Boyd best-constant weights contract at
+  least as fast as uniform averaging (both live in the constant-edge-weight
+  family W = I - a L there, and Xiao-Boyd picks the optimal a).  On
+  non-regular graphs the comparison is FALSE: on a star graph Xiao-Boyd
+  goes negative and its sigma is *worse* than uniform's — pinned by
+  ``test_star_counterexample`` below, and the reason
+  ``FaultSchedule.compile`` rejects negative base weights;
+* sigma(W) < 1 exactly when the underlying graph lets disagreement die:
+  strongly connected topologies contract, disconnected ones do not;
+* the Dobrushin coefficient bounds one-step span contraction — the
+  time-varying analogue the fault-schedule validator builds on.
+
+Deterministic spot-checks always run; `hypothesis` widens them across
+topology x size (2..16) when installed (optional dev dependency).
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # property tests below are conditionally defined
+    hypothesis = None
+
+from repro.core import graph as G
+
+
+def _graph_zoo():
+    """(label, adjacency) for every topology family at sizes 2..16."""
+    zoo = []
+    for n in range(2, 17):
+        zoo.append((f"complete{n}", G.complete(n)))
+        zoo.append((f"ring{n}", G.ring(n, directed=False)))
+        if n >= 3:
+            zoo.append((f"dring{n}", G.ring(n, directed=True)))
+            zoo.append((f"star{n}", G.star(n)))
+    for r, c in ((2, 2), (2, 4), (3, 3), (2, 8), (4, 4)):
+        zoo.append((f"torus{r}x{c}", G.torus2d(r, c)))
+    for d in (1, 2, 3, 4):
+        zoo.append((f"cube{d}", G.hypercube(d)))
+    for n, p, s in ((5, 0.3, 0), (8, 0.2, 1), (12, 0.15, 2), (16, 0.1, 3)):
+        zoo.append((f"er{n}s{s}", G.random_strongly_connected(n, p, seed=s)))
+    return zoo
+
+
+ZOO = _graph_zoo()
+
+#: vertex-transitive / degree-regular members: here uniform averaging is
+#: itself a constant-edge-weight matrix, so Xiao-Boyd dominates it
+REGULAR = [(label, A) for label, A in ZOO
+           if label.startswith(("complete", "ring", "torus", "cube"))]
+
+
+def _assert_row_stochastic(W, label):
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9,
+                               err_msg=f"{label}: rows must sum to 1")
+
+
+def _check_builders(label, A):
+    Wu = G.uniform_weights(A)
+    Wm = G.metropolis_weights(A)
+    Wx = G.xiao_boyd_weights(A)
+    for W in (Wu, Wm, Wx):
+        _assert_row_stochastic(W, label)
+    assert Wu.min() >= 0.0, f"{label}: uniform weights must be nonnegative"
+    assert Wm.min() >= 0.0, f"{label}: metropolis weights must be nonnegative"
+    np.testing.assert_allclose(Wm, Wm.T, atol=1e-12,
+                               err_msg=f"{label}: metropolis must be symmetric")
+    np.testing.assert_allclose(Wm.sum(axis=0), 1.0, atol=1e-9,
+                               err_msg=f"{label}: metropolis doubly stochastic")
+
+
+@pytest.mark.parametrize("label,A", ZOO[::5] + REGULAR[:3],
+                         ids=lambda v: v if isinstance(v, str) else "A")
+def test_builders_basic(label, A):
+    _check_builders(label, A)
+
+
+@pytest.mark.parametrize("label,A", REGULAR[::4],
+                         ids=lambda v: v if isinstance(v, str) else "A")
+def test_xiao_boyd_dominates_uniform_on_regular(label, A):
+    assert G.sigma(G.xiao_boyd_weights(A)) <= G.sigma(G.uniform_weights(A)) \
+        + 1e-9, f"{label}: XB should contract at least as fast as uniform"
+
+
+def test_star_counterexample():
+    """Why compile() refuses Xiao-Boyd on non-regular graphs: on a star the
+    best *constant* edge weight overshoots through the hub — entries go
+    negative and the contraction is strictly worse than plain averaging."""
+    A = G.star(6)
+    Wx = G.xiao_boyd_weights(A)
+    assert Wx.min() < 0.0
+    assert G.sigma(Wx) > G.sigma(G.uniform_weights(A))
+
+
+def test_sigma_contracts_iff_connected():
+    for label, A in ZOO[::6]:
+        assert G.is_strongly_connected(A), label
+        assert G.sigma(G.uniform_weights(A)) < 1.0 - 1e-9, label
+    # two disjoint triangles: disagreement across components never dies
+    blocks = np.kron(np.eye(2), G.complete(3))
+    assert not G.is_strongly_connected(blocks)
+    assert G.sigma(G.uniform_weights(blocks)) > 1.0 - 1e-9
+    with pytest.raises(ValueError):
+        G.xiao_boyd_weights(blocks)
+
+
+def test_dobrushin_deterministic():
+    # uniform complete graph (self-loop): W = 11^T/n, every row identical
+    # -> one-step consensus
+    assert G.dobrushin(G.uniform_weights(G.complete(4))) == 0.0
+    # long undirected ring: far-apart rows share no column -> not scrambling
+    W = G.uniform_weights(G.ring(8, directed=False))
+    assert G.dobrushin(W) == pytest.approx(1.0)
+    # ...but its 4-step self-product is
+    P = np.linalg.matrix_power(W, 4)
+    assert G.dobrushin(P) < 1.0
+
+
+def test_windowed_sigma_and_b_connectivity_rotating_edge():
+    """A sequence where each step carries ONE directed ring edge: no single
+    step (or short window) is connected, but any n-step window closes the
+    ring — the canonical B-strongly-connected-but-not-1-connected case."""
+    n = 4
+    seq = []
+    for k in range(3 * n):
+        keep = np.zeros((n, n))
+        i = k % n
+        keep[(i + 1) % n, i] = 1.0
+        W = 0.5 * np.eye(n) + 0.5 * (np.eye(n) + keep) \
+            / (1.0 + keep.sum(axis=1, keepdims=True))
+        W = W / W.sum(axis=1, keepdims=True)
+        seq.append(W)
+    seq = np.asarray(seq)
+    assert G.is_b_strongly_connected(seq, n)
+    assert not G.is_b_strongly_connected(seq, 2)
+    with pytest.raises(ValueError):
+        G.windowed_sigma(seq, 0)
+    # B-connectivity + positive diagonals -> window product over B*(n-1)
+    # steps is scrambling (Dobrushin < 1): span strictly shrinks
+    assert (G.windowed_sigma(seq, n * (n - 1)) < 1.0).all()
+
+
+if hypothesis is not None:
+    @hypothesis.given(idx=st.integers(0, len(ZOO) - 1))
+    @hypothesis.settings(max_examples=40, deadline=None)
+    def test_builders_property(idx):
+        label, A = ZOO[idx]
+        _check_builders(label, A)
+
+    @hypothesis.given(idx=st.integers(0, len(REGULAR) - 1))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_xiao_boyd_dominates_uniform_property(idx):
+        label, A = REGULAR[idx]
+        assert G.sigma(G.xiao_boyd_weights(A)) \
+            <= G.sigma(G.uniform_weights(A)) + 1e-9, label
+
+    @hypothesis.given(idx=st.integers(0, len(ZOO) - 1),
+                      seed=st.integers(0, 2 ** 16))
+    @hypothesis.settings(max_examples=25, deadline=None)
+    def test_dobrushin_bounds_span_contraction(idx, seed):
+        """span(Wx) <= tau(W) * span(x) for every builder and random x —
+        the inequality the fault-window certification rests on."""
+        label, A = ZOO[idx]
+        n = A.shape[0]
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=n)
+        span = x.max() - x.min()
+        for W in (G.uniform_weights(A), G.metropolis_weights(A)):
+            y = W @ x
+            assert (y.max() - y.min()) <= G.dobrushin(W) * span + 1e-9, label

@@ -1,0 +1,81 @@
+"""Telemetry contract tests for the serving engine (serving/engine.py).
+
+The engine's ``last_stats`` dict and its per-call ``serve.generate`` sink
+records are consumed by the observability pipeline and dashboards; these
+tests pin the schema (exact key set, numeric types, sane values) so a
+refactor cannot silently drop a counter the JSONL consumers expect.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import registry as REG
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+
+LAST_STATS_KEYS = {"batch", "prompt_len", "new_tokens", "prefill_ms",
+                   "decode_ms", "decode_ms_per_token", "decode_tokens_per_s"}
+
+
+@pytest.fixture(scope="module")
+def engine_and_sink():
+    import jax
+    cfg = REG.get_smoke_config("h2o-danube-1.8b")
+    params = T.init_params(jax.random.key(0), cfg)
+    sink = obs.MemorySink()
+    return Engine(cfg, params, max_len=32, sink=sink), sink
+
+
+def test_last_stats_schema(engine_and_sink):
+    eng, _ = engine_and_sink
+    eng.generate(np.array([[1, 2, 3], [4, 5, 6]], np.int32), n_new=4)
+    assert set(eng.last_stats) == LAST_STATS_KEYS
+    s = eng.last_stats
+    assert s["batch"] == 2 and s["prompt_len"] == 3 and s["new_tokens"] == 4
+    for key in ("prefill_ms", "decode_ms", "decode_ms_per_token"):
+        assert isinstance(s[key], float) and s[key] >= 0.0, key
+    assert s["decode_tokens_per_s"] > 0.0
+    # per-token and aggregate decode counters must agree
+    assert s["decode_ms_per_token"] == pytest.approx(
+        s["decode_ms"] / s["new_tokens"], abs=0.002)
+
+
+def test_generate_sink_record_schema(engine_and_sink):
+    eng, sink = engine_and_sink
+    n_before = len(sink.records)
+    eng.generate(np.array([[9, 8]], np.int32), n_new=3)
+    eng.generate(np.array([[7, 6]], np.int32), n_new=3)
+    recs = sink.records[n_before:]
+    assert len(recs) == 2
+    for rec in recs:
+        assert rec["name"] == "serve.generate"
+        assert set(rec) == {"name", "step"} | LAST_STATS_KEYS
+        for k in LAST_STATS_KEYS:
+            assert isinstance(rec[k], (int, float)), k
+    # step is the per-engine call counter: monotone, +1 per generate
+    assert recs[1]["step"] == recs[0]["step"] + 1
+
+
+def test_last_stats_reset_each_call(engine_and_sink):
+    eng, _ = engine_and_sink
+    eng.generate(np.array([[1, 2]], np.int32), n_new=2)
+    assert eng.last_stats["batch"] == 1 and eng.last_stats["new_tokens"] == 2
+    eng.generate(np.array([[1, 2, 3, 4]] * 3, np.int32), n_new=5)
+    assert eng.last_stats["batch"] == 3
+    assert eng.last_stats["prompt_len"] == 4
+    assert eng.last_stats["new_tokens"] == 5
+
+
+def test_records_jsonl_roundtrip(tmp_path, engine_and_sink):
+    """serve.generate records written through JsonlSink parse back with the
+    schema intact — the format the golden-run tooling reads."""
+    eng, _ = engine_and_sink
+    path = str(tmp_path / "serve.jsonl")
+    jsink = obs.JsonlSink(path)
+    eng2 = Engine(eng.cfg, eng.params, max_len=32, sink=jsink)
+    eng2.generate(np.array([[5, 4, 3]], np.int32), n_new=2)
+    jsink.close()
+    rows = obs.read_jsonl(path)
+    assert len(rows) == 1
+    assert rows[0]["name"] == "serve.generate" and rows[0]["step"] == 0
+    assert set(rows[0]) == {"name", "step"} | LAST_STATS_KEYS
