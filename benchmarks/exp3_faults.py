@@ -81,10 +81,14 @@ def make_opt(method: str, scale: float = 1.0):
     raise ValueError(method)
 
 
-def compiled_schedule(drop: float, K: int, seed: int):
+def compiled_schedule(drop: float, K: int, seed: int,
+                      drop_mode: str = "directed"):
     """Seeded link-drop schedule against the Exp-1 graph.  drop=0 keeps the
-    healthy W for every step (the control arm)."""
-    sched = FaultSchedule(link_drop=drop, seed=seed)
+    healthy W for every step (the control arm).  ``drop_mode="symmetric"``
+    switches to undirected failures with mass-to-diagonal absorption —
+    W_t stays doubly stochastic, so the mean-drift floor of the directed
+    model disappears (docs/robustness.md)."""
+    sched = FaultSchedule(link_drop=drop, seed=seed, drop_mode=drop_mode)
     return sched.compile(G.complete(N_AGENTS), K,
                          weight_fn=G.xiao_boyd_weights)
 
@@ -92,11 +96,12 @@ def compiled_schedule(drop: float, K: int, seed: int):
 # ------------------------------------------------------------- quadratic
 
 def run_quadratic(method: str, drop: float, K: int, seed: int,
-                  collect_metrics: bool = False) -> dict:
+                  collect_metrics: bool = False,
+                  drop_mode: str = "directed") -> dict:
     # Start along the flat axis (curvature 0.01), the regime the paper's
     # Exp-1 highlights: plain DGD crawls, the fractional memory accelerates.
     x0 = jnp.tile(jnp.asarray([0.0, 1.0], jnp.float32), (N_AGENTS, 1))
-    faults = compiled_schedule(drop, K, seed)
+    faults = compiled_schedule(drop, K, seed, drop_mode)
     res = loop.run(quad_objective, x0, make_opt(method), None, K,
                    x_star=jnp.zeros(2, jnp.float32), faults=faults,
                    collect_metrics=collect_metrics)
@@ -134,13 +139,14 @@ def _fed_loss(params, x, y):
     return loss, acc
 
 
-def run_federated(method: str, drop: float, steps: int, seed: int) -> dict:
+def run_federated(method: str, drop: float, steps: int, seed: int,
+                  drop_mode: str = "directed") -> dict:
     """Per-step fault-masked consensus on the synthetic 10-class problem.
     Returns loss/acc curves plus the consensus-error and fault traces."""
     X, y = make_classification(n_per_class=50, n_agents=N_AGENTS, seed=seed,
                                noise=2.0)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
-    faults = compiled_schedule(drop, steps, seed)
+    faults = compiled_schedule(drop, steps, seed, drop_mode)
     W_seq = jnp.asarray(faults.W_seq, jnp.float32)
     opt = make_opt(method, scale=0.0625)       # 0.05/0.02-flavored LRs
     keys = jax.random.split(jax.random.key(seed), N_AGENTS)
@@ -190,17 +196,20 @@ def _drop_tag(drop: float) -> str:
 
 
 def run_experiment(seed=0, quad_steps=2000, fed_steps=150, out=None,
-                   metrics_out=None, metrics_steps=120) -> dict:
+                   metrics_out=None, metrics_steps=120,
+                   drop_mode="directed") -> dict:
     """Full sweep: methods x (healthy + DROP_RATES) on both tasks.
 
     ``metrics_out`` streams per-step telemetry JSONL for the first
     ``metrics_steps`` rounds of every arm (the regression-baseline
     trajectories); the summary JSON carries iterations-to-tolerance,
     degradation ratios, and the FrODO-vs-DGD robustness headline.
+    ``drop_mode="symmetric"`` reruns the whole sweep under undirected
+    (doubly-stochasticity-preserving) failures.
     """
     sink = obs.JsonlSink(metrics_out) if metrics_out else None
     drops = (0.0,) + tuple(DROP_RATES)
-    summary = {"quadratic": {}, "federated": {}}
+    summary = {"quadratic": {}, "federated": {}, "drop_mode": drop_mode}
 
     for drop in drops:
         tag = _drop_tag(drop)
@@ -208,7 +217,8 @@ def run_experiment(seed=0, quad_steps=2000, fed_steps=150, out=None,
         for m in METHODS:
             t0 = time.perf_counter()
             res = run_quadratic(m, drop, quad_steps, seed,
-                                collect_metrics=sink is not None)
+                                collect_metrics=sink is not None,
+                                drop_mode=drop_mode)
             ms = (time.perf_counter() - t0) * 1e3 / max(quad_steps, 1)
             qrow[m] = {"iters_to_tol": iters_to_tol(res["errors"]),
                        "final_error": float(res["errors"][-1]),
@@ -234,7 +244,8 @@ def run_experiment(seed=0, quad_steps=2000, fed_steps=150, out=None,
                         "step_time_ms":
                             round(ms + float(res["jitter_ms"][s]), 6),
                     })
-            fed = run_federated(m, drop, fed_steps, seed)
+            fed = run_federated(m, drop, fed_steps, seed,
+                                drop_mode=drop_mode)
             frow[m] = {"final_loss": float(fed["loss"][-1]),
                        "final_acc": float(fed["acc"][-1])}
             if sink is not None:
@@ -298,13 +309,20 @@ def main():
                     default="experiments/exp3_metrics.jsonl",
                     help="per-step telemetry JSONL ('' disables)")
     ap.add_argument("--metrics-steps", type=int, default=120)
+    ap.add_argument("--drop-mode", choices=("directed", "symmetric"),
+                    default="directed",
+                    help="'directed': one-way drops, rows renormalized "
+                         "(mean drifts); 'symmetric': undirected failures "
+                         "with mass-to-diagonal absorption (W_t stays "
+                         "doubly stochastic, no drift floor)")
     args = ap.parse_args()
     print(json.dumps(run_experiment(seed=args.seed,
                                     quad_steps=args.quad_steps,
                                     fed_steps=args.fed_steps,
                                     out=args.out,
                                     metrics_out=args.metrics_out or None,
-                                    metrics_steps=args.metrics_steps),
+                                    metrics_steps=args.metrics_steps,
+                                    drop_mode=args.drop_mode),
                      indent=1))
 
 

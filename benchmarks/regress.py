@@ -37,7 +37,8 @@ DEFAULT_BASELINE_DIR = os.path.join(HERE, "baselines")
 
 # reduced-scale defaults: small enough for CI, long enough that the
 # convergence dynamics (memory ramp-up over T steps, consensus decay) show
-DEFAULT_STEPS = {"exp1": 150, "exp2": 40, "exp3": 400, "train": 12}
+DEFAULT_STEPS = {"exp1": 150, "exp2": 40, "exp3": 400, "train": 12,
+                 "serve": 8}
 
 #: trainer sink counters that are pure wall-clock (monotone / machine
 #: dependent) — dropped from the train baseline; step_time_ms stays and is
@@ -86,8 +87,17 @@ def run_train(jsonl_path: str, seed: int, steps: int) -> None:
     os.remove(raw)
 
 
+def run_serve(jsonl_path: str, seed: int, steps: int) -> None:
+    """Seeded Poisson-arrival serving trace (benchmarks/serve_bench.py):
+    ``steps`` is the number of synthetic requests.  Queue/occupancy
+    counters, TTFT in scheduler steps, and greedy token checksums are all
+    deterministic; wall-clock keys are stripped by the bench."""
+    from benchmarks.serve_bench import run_bench
+    run_bench(jsonl_path, seed=seed, n_requests=steps)
+
+
 RUNNERS = {"exp1": run_exp1, "exp2": run_exp2, "exp3": run_exp3,
-           "train": run_train}
+           "train": run_train, "serve": run_serve}
 
 
 def baseline_path(baseline_dir: str, exp: str) -> str:

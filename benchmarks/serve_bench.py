@@ -1,0 +1,72 @@
+"""Serving golden-run benchmark: seeded traffic trace for regression CI.
+
+Runs the Poisson-arrival synthetic workload (``repro.launch.serve``) on the
+smoke model and rewrites its ``serve.step`` / ``serve.request`` telemetry
+into the golden-run JSONL dialect (``exp``/``variant``/``seed`` group keys,
+wall-clock counters stripped):
+
+    python benchmarks/serve_bench.py --seed 0 --metrics-out serve.jsonl
+
+Everything left in the stream is deterministic for a given seed — queue
+depths, occupancy, admission counts, per-request TTFT in scheduler steps,
+and the token-id checksums (``token_sum``/``token_last``) that pin the
+actual greedy outputs.  ``step_time_ms`` stays and is compared as a
+percentile band.  ``benchmarks/regress.py --record/--check --exp serve``
+maintains the committed baseline (benchmarks/baselines/serve.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+#: per-request counters that are pure wall clock — dropped from the golden
+#: stream (TTFT survives as the deterministic ``ttft_steps``)
+SERVE_VOLATILE_KEYS = ("ttft_ms", "e2e_ms", "decode_tokens_per_s")
+
+DEFAULT_ARCH = "mamba2-780m"
+
+
+def run_bench(metrics_out: str, seed: int = 0, n_requests: int = 8,
+              arch: str = DEFAULT_ARCH, quiet: bool = True) -> dict:
+    """Run the seeded workload and write golden-dialect JSONL; returns the
+    workload summary."""
+    from repro.launch.serve import run_traffic
+
+    raw = metrics_out + ".raw"
+    summary = run_traffic(arch=arch, smoke=True, n_requests=n_requests,
+                          seed=seed, metrics_out=raw, quiet=quiet)
+    with open(raw) as src, open(metrics_out, "w") as dst:
+        for line in src:
+            rec = json.loads(line)
+            if rec.get("name") == "serve.request":
+                for k in SERVE_VOLATILE_KEYS:
+                    rec.pop(k, None)
+            rec.update(exp="serve", variant=f"{arch}-smoke", seed=seed)
+            dst.write(json.dumps(rec) + "\n")
+    os.remove(raw)
+    return summary
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arch", default=DEFAULT_ARCH)
+    ap.add_argument("--metrics-out", required=True,
+                    help="golden-dialect JSONL output path")
+    args = ap.parse_args()
+    summary = run_bench(args.metrics_out, seed=args.seed,
+                        n_requests=args.requests, arch=args.arch,
+                        quiet=False)
+    print(f"metrics -> {args.metrics_out}")
+    return 0 if summary["n_requests"] == args.requests else 1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,45 +1,76 @@
-"""Batched serving: greedy-decode a reduced qwen3-family model through the
-Engine (prefill token-by-token + KV-cache decode), the same serve_step the
-decode dry-run shapes lower on the 256/512-chip meshes.
+"""Continuous batching: staggered requests through the serving scheduler.
+
+Submits a handful of requests at different scheduler steps (like traffic
+trickling into a server), lets the scheduler pack them into one KV-cache
+arena — chunked prefill interleaved with batched decode at per-slot
+positions — and prints a per-request TTFT table from the ``serve.request``
+telemetry.  Greedy outputs are bit-identical to running each request
+alone (tests/test_serving_scheduler.py pins this).
 
     PYTHONPATH=src python examples/serve_batched.py [--arch h2o-danube-1.8b]
 """
 import argparse
-import time
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import registry as REG
 from repro.models import transformer as T
-from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b", choices=REG.ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--max-slots", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = REG.get_smoke_config(args.arch)
     params = T.init_params(jax.random.key(0), cfg)
-    eng = Engine(cfg, params, max_len=128)
+    sink = obs.MemorySink()
+    sch = Scheduler(cfg, params,
+                    SchedulerConfig(max_slots=args.max_slots, max_len=128,
+                                    prefill_chunk=8, token_budget=24),
+                    sink=sink)
 
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab, (args.batch, 8)).astype(np.int32)
-    frames = None
-    if cfg.family == "audio":
-        frames = rng.normal(size=(args.batch, cfg.n_frames,
-                                  cfg.d_model)).astype(np.float32)
-    t0 = time.perf_counter()
-    out = eng.generate(prompts, n_new=args.new_tokens, frames=frames)
-    dt = time.perf_counter() - t0
-    tps = args.batch * args.new_tokens / dt
-    print(f"arch={args.arch} (reduced) batch={args.batch} "
-          f"new={args.new_tokens} -> {tps:.1f} tok/s on CPU")
-    for i, row in enumerate(out[: min(4, args.batch)]):
-        print(f"  req{i}: {row.tolist()}")
+    rng = np.random.default_rng(args.seed)
+    # requests arrive two scheduler steps apart — more than the pool can
+    # hold at once, so later ones queue and are admitted mid-flight
+    arrivals = [2 * i for i in range(args.requests)]
+    lens = rng.integers(4, 16, args.requests)
+    rids, k = [], 0
+    while sch.has_work or k < args.requests:
+        while k < args.requests and arrivals[k] <= sch.step_idx:
+            prompt = rng.integers(1, cfg.vocab, lens[k]).astype(np.int32)
+            frames = None
+            if cfg.family == "audio":
+                frames = rng.normal(size=(cfg.n_frames, cfg.d_model)
+                                    ).astype(np.float32)
+            rids.append(sch.submit(prompt, args.new_tokens, frames=frames))
+            k += 1
+        if sch.has_work:
+            sch.step()
+
+    steps = [r for r in sink.records if r["name"] == "serve.step"]
+    reqs = {r["step"]: r for r in sink.records
+            if r["name"] == "serve.request"}
+    print(f"arch={args.arch} (reduced) requests={args.requests} "
+          f"slots={args.max_slots} -> {sch.step_idx} scheduler steps, "
+          f"peak occupancy {max(r['occupancy'] for r in steps)}, "
+          f"peak queue {max(r['queue_depth'] for r in steps)}")
+    print(f"{'req':>4} {'prompt':>7} {'queued':>7} {'ttft':>5} "
+          f"{'ttft_ms':>8}  tokens")
+    for rid in rids:
+        r = reqs[rid]
+        toks = sch.poll(rid).tolist()
+        tok_s = " ".join(map(str, toks[:6])) + (" ..." if len(toks) > 6
+                                                else "")
+        print(f"{rid:>4} {r['prompt_len']:>7} {r['queue_steps']:>7} "
+              f"{r['ttft_steps']:>5} {r['ttft_ms']:>8.1f}  {tok_s}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,20 @@ Degradation semantics (docs/robustness.md):
 * a **crashed** agent neither updates nor communicates: its row and column
   are cut (row = ``e_i``) for the whole window, freezing its state until it
   rejoins, at which point consensus pulls it back toward the group.
+
+Two link-drop models, selected by ``drop_mode``:
+
+* ``"directed"`` (default) — each directed edge drops independently and the
+  receiving row renormalizes over its surviving in-edges.  Row-stochasticity
+  survives but double stochasticity does not, so the network mean
+  random-walks (the mean-drift floor of docs/robustness.md).
+* ``"symmetric"`` — an undirected failure takes both directions of a link
+  at once, and the dropped off-diagonal mass is absorbed into the two
+  endpoint *diagonals* instead of renormalizing (``mask_and_absorb``).  A
+  symmetric doubly stochastic base ``W`` stays doubly stochastic under
+  every mask, the network mean is conserved exactly, and the drift floor
+  disappears — the failure model of a link (cable/switch) rather than a
+  one-way packet loss.
 """
 from __future__ import annotations
 
@@ -71,6 +85,10 @@ class FaultSchedule:
     """Declarative fault scenario; ``compile`` turns it into arrays.
 
     ``link_drop``       — i.i.d. per-step, per-directed-edge drop probability.
+    ``drop_mode``       — ``"directed"`` (independent one-way drops, rows
+                          renormalized) or ``"symmetric"`` (undirected link
+                          failures, dropped mass absorbed to the diagonal so
+                          a doubly stochastic W stays doubly stochastic).
     ``straggler_frac``  — fraction of agents (rounded down) that straggle
                           each step; the straggling set is resampled per step.
     ``crashes``         — crash-and-rejoin windows (see ``CrashWindow``).
@@ -84,6 +102,7 @@ class FaultSchedule:
     crashes: Tuple[CrashWindow, ...] = ()
     jitter_ms: float = 0.0
     seed: int = 0
+    drop_mode: str = "directed"
 
     def __post_init__(self):
         if not (0.0 <= self.link_drop <= 1.0):
@@ -92,6 +111,9 @@ class FaultSchedule:
             raise ValueError("straggler_frac must be in [0, 1)")
         if self.jitter_ms < 0:
             raise ValueError("jitter_ms must be >= 0")
+        if self.drop_mode not in ("directed", "symmetric"):
+            raise ValueError(f"unknown drop_mode {self.drop_mode!r} "
+                             "(expected 'directed' or 'symmetric')")
 
     # ------------------------------------------------------------- sampling
 
@@ -101,11 +123,17 @@ class FaultSchedule:
 
     def link_mask(self, k: int, A: np.ndarray) -> np.ndarray:
         """(A, A) 0/1 keep-mask over the *directed edges* of adjacency ``A``
-        at step ``k`` (diagonal/self-loops never drop)."""
+        at step ``k`` (diagonal/self-loops never drop).  In symmetric mode
+        the upper-triangle draw is mirrored, so both directions of an
+        undirected link fail together."""
         n = A.shape[0]
         keep = np.ones((n, n))
         if self.link_drop > 0.0:
-            drops = self._rng(0, k).random((n, n)) < self.link_drop
+            u = self._rng(0, k).random((n, n))
+            if self.drop_mode == "symmetric":
+                ut = np.triu(u, 1)
+                u = ut + ut.T
+            drops = u < self.link_drop
             keep = np.where((A > 0) & drops, 0.0, 1.0)
         np.fill_diagonal(keep, 1.0)
         return keep
@@ -140,10 +168,15 @@ class FaultSchedule:
         """Bake K steps of this schedule against base adjacency ``A``.
 
         ``weight_fn(A) -> W`` builds the healthy mixing matrix; each step's
-        ``W_t`` is that W with the step's dropped/crashed edges masked and
-        rows renormalized (``mask_and_renormalize``).  Requires a
-        nonnegative W — best-constant (Xiao–Boyd) weights on non-regular
-        graphs can go negative, where per-edge masking is ill-defined.
+        ``W_t`` is that W with the step's dropped/crashed edges masked and,
+        depending on ``drop_mode``, rows renormalized
+        (``mask_and_renormalize``) or dropped mass absorbed into the
+        diagonal (``mask_and_absorb`` — keeps a doubly stochastic W doubly
+        stochastic).  Requires a nonnegative W — best-constant (Xiao–Boyd)
+        weights on non-regular graphs can go negative, where per-edge
+        masking is ill-defined.  Symmetric mode additionally requires a
+        symmetric base W (mass absorption conserves column sums only when
+        the two directions of a link carry equal weight).
         """
         A = (np.asarray(A, np.float64) > 0).astype(np.float64)
         n = A.shape[0]
@@ -153,6 +186,15 @@ class FaultSchedule:
                 "fault masking requires a nonnegative base W; got entries as "
                 f"low as {W_base.min():.3g} (use uniform/metropolis weights, "
                 "or Xiao-Boyd on a regular topology)")
+        if self.drop_mode == "symmetric":
+            if not np.allclose(W_base, W_base.T, atol=1e-12):
+                raise ValueError(
+                    "symmetric drop mode requires a symmetric base W "
+                    "(metropolis weights, or uniform/Xiao-Boyd on a regular "
+                    "topology)")
+            mask_fn = mask_and_absorb
+        else:
+            mask_fn = mask_and_renormalize
 
         W_seq = np.empty((K, n, n))
         update_mask = np.ones((K, n))
@@ -170,7 +212,7 @@ class FaultSchedule:
                 keep[down, :] = 0.0
                 keep[:, down] = 0.0
                 np.fill_diagonal(keep, 1.0)
-            W_t, isolated = mask_and_renormalize(W_base, keep)
+            W_t, isolated = mask_fn(W_base, keep)
             if down.any():
                 # a crashed agent holds its state exactly (row = e_i)
                 W_t[down, :] = 0.0
@@ -215,6 +257,33 @@ def mask_and_renormalize(W: np.ndarray, keep: np.ndarray
         M[dead, dead] = 1.0
         rows = M.sum(axis=1)
     return M / rows[:, None], isolated
+
+
+def mask_and_absorb(W: np.ndarray, keep: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric-failure masking: dropped off-diagonal mass moves onto the
+    *diagonal* instead of being renormalized away.
+
+    For a symmetric ``keep`` mask and a symmetric doubly stochastic ``W``
+    (Metropolis anywhere, uniform/Xiao–Boyd on regular topologies) the
+    masked ``W_t`` is again symmetric and doubly stochastic: row ``i`` keeps
+    summing to 1 because its dropped mass lands on ``W_t[i, i]``, and column
+    sums follow by symmetry.  Double stochasticity conserves the network
+    mean exactly, so symmetric drops degrade only the mixing *rate* — there
+    is no mean-drift floor (docs/robustness.md).  Returns ``(W_t,
+    isolated)`` with ``isolated`` flagging rows whose off-diagonal mass all
+    dropped (pure local step, as in ``mask_and_renormalize``).
+    """
+    W = np.asarray(W, np.float64)
+    keep = np.asarray(keep, np.float64).copy()
+    n = W.shape[0]
+    np.fill_diagonal(keep, 1.0)
+    M = W * keep
+    dropped = (W * (1.0 - keep)).sum(axis=1)
+    M[np.arange(n), np.arange(n)] += dropped
+    offdiag = M * (1.0 - np.eye(n))
+    isolated = offdiag.sum(axis=1) <= 0.0
+    return M, isolated
 
 
 @dataclasses.dataclass(frozen=True)

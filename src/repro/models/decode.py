@@ -227,3 +227,56 @@ def _ssm_step(bp, c, h, cfg):
     hh = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
     out, c = S.mamba_decode(bp["mix"], hh, c, cfg)
     return h + out, c
+
+
+# ----------------------------------------------------- prefill + ragged decode
+
+def prefill_cache(params, cache, tokens, pos0, cfg: ModelConfig,
+                  window_override: Optional[int] = None):
+    """One-pass cache-writing prefill: advance ``decode_step`` over a whole
+    token chunk inside a single compiled ``lax.scan`` — one dispatch per
+    chunk instead of the old per-token host loop (O(P) dispatches).
+
+    ``tokens``: (B, C) int32; ``pos0``: scalar int32 start position of the
+    chunk (0 for a fresh prompt, the running offset for chunked prefill).
+    Returns ``(last_logits (B, V), cache)`` — the logits of the final chunk
+    token, i.e. the distribution of the first token *after* the chunk.
+
+    The scan body is the same ``decode_step`` the serving path uses for
+    generation, so the populated cache is equivalent to the token-by-token
+    path by construction (pinned in tests/test_serving_scheduler.py).
+    """
+    C = tokens.shape[1]
+    toks = jnp.swapaxes(tokens, 0, 1)[:, :, None]          # (C, B, 1)
+    positions = pos0 + jnp.arange(C, dtype=jnp.int32)
+
+    def step(cache, inp):
+        tok, p = inp
+        logits, cache = decode_step(params, cache, tok, p, cfg,
+                                    window_override)
+        return cache, logits[:, -1]
+
+    cache, last = jax.lax.scan(step, cache, (toks, positions))
+    return last[-1], cache
+
+
+def decode_step_ragged(params, cache, tokens, pos, cfg: ModelConfig,
+                       window_override: Optional[int] = None):
+    """``decode_step`` with a *per-sequence* position vector — the unit of
+    continuous batching, where every cache slot sits at a different depth.
+
+    ``tokens``: (B, 1) int32; ``pos``: (B,) int32.  Returns
+    ``(logits (B, 1, V), new cache)``.  Implemented as a vmap over the slot
+    dimension (batch axis 1 of every cache leaf, after layer stacking), so
+    each slot's computation is independent of what the other slots hold —
+    the property that makes scheduler outputs bit-identical to solo runs.
+    """
+
+    def one(cache_b, tok, p):
+        c1 = jax.tree.map(lambda l: jnp.expand_dims(l, 1), cache_b)
+        logits, c1 = decode_step(params, c1, tok[None], p, cfg,
+                                 window_override)
+        return logits[0], jax.tree.map(lambda l: jnp.squeeze(l, 1), c1)
+
+    return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+        cache, tokens, pos)

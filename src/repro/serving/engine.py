@@ -1,14 +1,18 @@
-"""Serving engine: chunked prefill + batched greedy/sampled decode.
+"""Serving engine: convenience front-end over the batching scheduler.
 
-``serve_step`` (one token, whole batch) is the unit the decode dry-run
-shapes lower; ``Engine`` is the runnable host-side loop used by the
-examples and tests.
+``serve_step`` (one token, whole batch) and ``make_prefill`` are the units
+the decode dry-run shapes lower; ``Engine`` is the runnable host-side API
+used by the examples and tests.  Since the continuous-batching scheduler
+landed (serving/scheduler.py), ``Engine`` owns a persistent
+:class:`~repro.serving.scheduler.Scheduler` and ``generate()`` is a
+blocking wrapper over its ``submit``/``poll`` lifecycle — prompts are
+prefilled in one compiled pass (``models.decode.prefill_cache``), not
+token-by-token.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
@@ -19,6 +23,7 @@ from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import decode as D
 from repro.models import transformer as T
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 def make_serve_step(cfg: ModelConfig, window_override: Optional[int] = None):
@@ -35,9 +40,8 @@ def make_serve_step(cfg: ModelConfig, window_override: Optional[int] = None):
 
 def make_prefill(cfg: ModelConfig):
     """Full-sequence prefill producing last-token logits (the dry-run unit
-    for prefill shapes).  Cache population for mixed prefill+decode serving
-    is done token-by-token by the Engine below (host loop) — adequate for
-    CPU tests; a production prefill would write the cache in one pass."""
+    for prefill shapes).  The serving path instead uses
+    ``models.decode.prefill_cache``, which also writes the KV cache."""
 
     def prefill(params, batch):
         logits, _ = T.forward(params, batch, cfg, remat=False)
@@ -48,56 +52,62 @@ def make_prefill(cfg: ModelConfig):
 
 @dataclasses.dataclass
 class Engine:
-    """Minimal batched serving loop (greedy).
+    """Batched greedy generation over the continuous-batching scheduler.
+
+    ``generate(prompts, n_new)`` submits one request per row and drives the
+    scheduler until all of them finish — because each slot's decode lane is
+    independent, the result is bit-identical to running the scheduler
+    request-by-request (pinned in tests/test_serving_scheduler.py).  For
+    streaming/interleaved workloads use :attr:`scheduler` directly
+    (``submit``/``step``/``poll``).
 
     Per-``generate`` timing counters land in ``last_stats`` (prefill /
     decode wall, tokens/s) and, when a ``sink`` is attached, are written as
-    one ``serve.generate`` record per call — the serving half of the
-    telemetry pipeline (docs/observability.md).
+    one ``serve.generate`` record per call; the scheduler shares the sink,
+    so its per-round ``serve.step`` and per-completion ``serve.request``
+    records interleave in the same stream (docs/serving.md).
     """
     cfg: ModelConfig
     params: Any
     max_len: int = 256
     window_override: Optional[int] = None
     sink: Optional[obs.MetricsSink] = None
+    max_slots: int = 8
+    prefill_chunk: int = 16
+    token_budget: int = 64
 
     def __post_init__(self):
-        self._step = jax.jit(make_serve_step(self.cfg, self.window_override))
-        self._cache0 = D.init_cache(self.cfg, 0, 0)  # placeholder, unused
+        self.scheduler = Scheduler(
+            self.cfg, self.params,
+            SchedulerConfig(max_slots=self.max_slots, max_len=self.max_len,
+                            prefill_chunk=self.prefill_chunk,
+                            token_budget=self.token_budget,
+                            window_override=self.window_override),
+            sink=self.sink)
         self.last_stats: Dict[str, float] = {}
         self._n_calls = 0
 
     def generate(self, prompts: np.ndarray, n_new: int,
                  frames: Optional[np.ndarray] = None) -> np.ndarray:
-        """prompts: (B, P) int32 (right-aligned, no padding support needed
-        for the examples).  Returns (B, n_new)."""
+        """prompts: (B, P) int32 (unpadded).  Returns (B, n_new) greedy
+        continuations.  Blocks until the whole batch is done."""
         B, P = prompts.shape
-        cache = D.init_cache(self.cfg, B, self.max_len, self.window_override)
-        if self.cfg.family == "audio":
-            assert frames is not None
-            with obs.annotate("serve.encode"):
-                cache = D.encode_for_decode(self.params, cache,
-                                            jnp.asarray(frames), self.cfg)
+        sch = self.scheduler
+        p0, d0 = sch.prefill_s, sch.decode_s
         t0 = time.perf_counter()
-        tok = None
-        with obs.annotate("serve.prefill"):
-            for t in range(P):
-                tok, cache = self._step(self.params, cache,
-                                        jnp.asarray(prompts[:, t:t + 1]),
-                                        jnp.int32(t))
-            jax.block_until_ready(tok)
-        t1 = time.perf_counter()
-        out = []
-        pos = P
-        with obs.annotate("serve.decode"):
-            for _ in range(n_new):
-                out.append(np.asarray(tok[:, 0]))
-                tok, cache = self._step(self.params, cache, tok,
-                                        jnp.int32(pos))
-                pos += 1
-            jax.block_until_ready(tok)
-        t2 = time.perf_counter()
-        prefill_s, decode_s = t1 - t0, t2 - t1
+        rids = [sch.submit(prompts[b], n_new,
+                           frames=None if frames is None else frames[b])
+                for b in range(B)]
+        pending = set(rids)
+        while pending:
+            sch.step()
+            pending = {r for r in pending if sch.poll(r) is None}
+        out = np.stack([sch.poll(r) for r in rids], axis=0)
+        wall_s = time.perf_counter() - t0
+        prefill_s = sch.prefill_s - p0
+        # attribute non-decode scheduler overhead to the prefill bucket so
+        # the two buckets partition the call's wall time
+        decode_s = max(wall_s - prefill_s, sch.decode_s - d0)
         self.last_stats = {
             "batch": B, "prompt_len": P, "new_tokens": n_new,
             "prefill_ms": round(prefill_s * 1e3, 3),
@@ -109,4 +119,4 @@ class Engine:
             self.sink.write({"name": "serve.generate", "step": self._n_calls,
                              **self.last_stats})
         self._n_calls += 1
-        return np.stack(out, axis=1)
+        return out

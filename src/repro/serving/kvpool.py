@@ -1,0 +1,150 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool owns one fixed **arena**: the model cache pytree built for
+``max_slots`` sequences (every leaf carries the slot dimension at axis 1,
+after the layer-stack axis — ``(layers, max_slots, ...)``).  Requests are
+mapped onto slots by a free-list allocator; each slot tracks its own
+position counter, so sequences at different depths share one batched
+decode dispatch (``models.decode.decode_step_ragged``).
+
+Slot lifecycle:
+
+* ``alloc()``   — pop the lowest free slot id (deterministic ordering) and
+  **zero its cache** — attention KV beyond a slot's position is masked out
+  anyway, but recurrent state (SSM / RG-LRU) is not masked, so a stale
+  occupant would corrupt the next request;
+* ``read_slot`` / ``write_slot`` — gather/scatter one slot's cache slice
+  (batch-1 view) for chunked prefill, via traced dynamic slicing so the
+  compiled gather/scatter is reused across slots;
+* ``free()``    — return the slot to the free list (eviction on request
+  completion; the next ``alloc`` re-zeros it).
+
+The arena itself is functional (jax arrays): ``step``-level code reads
+``pool.arena``, runs a jitted update, and assigns the result back.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as D
+
+Pytree = Any
+
+#: the slot (sequence) axis of every arena leaf — axis 0 is the layer stack
+SLOT_AXIS = 1
+
+
+class PoolExhausted(RuntimeError):
+    """``alloc`` was called with no free slot (admission should gate on
+    ``n_free`` instead of trying)."""
+
+
+@jax.jit
+def _zero_slot(arena: Pytree, slot) -> Pytree:
+    def z(l):
+        zeros = jnp.zeros(l.shape[:SLOT_AXIS] + (1,)
+                          + l.shape[SLOT_AXIS + 1:], l.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(l, zeros, slot,
+                                                   axis=SLOT_AXIS)
+    return jax.tree.map(z, arena)
+
+
+@jax.jit
+def _gather_slot(arena: Pytree, slot) -> Pytree:
+    return jax.tree.map(
+        lambda l: jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=SLOT_AXIS),
+        arena)
+
+
+@jax.jit
+def _scatter_slot(arena: Pytree, slot_cache: Pytree, slot) -> Pytree:
+    return jax.tree.map(
+        lambda l, s: jax.lax.dynamic_update_slice_in_dim(
+            l, s.astype(l.dtype), slot, axis=SLOT_AXIS),
+        arena, slot_cache)
+
+
+class KVSlotPool:
+    """Fixed arena + free-list slot allocator + per-slot position counters.
+
+    Construct with a prebuilt arena (tests) or via :meth:`create` (the
+    scheduler path, which builds the arena with ``models.decode.init_cache``
+    so every family — dense ring-buffer KV, MLA latent, SSM/RG-LRU state,
+    audio cross-attention — gets its native cache layout).
+    """
+
+    def __init__(self, arena: Pytree, max_slots: int):
+        leaves = jax.tree.leaves(arena)
+        if not leaves:
+            raise ValueError("arena must have at least one leaf")
+        for l in leaves:
+            if l.ndim <= SLOT_AXIS or l.shape[SLOT_AXIS] != max_slots:
+                raise ValueError(
+                    f"arena leaf {l.shape} does not carry {max_slots} slots "
+                    f"at axis {SLOT_AXIS}")
+        self.arena = arena
+        self.max_slots = int(max_slots)
+        self.positions = np.zeros(self.max_slots, np.int32)
+        self._free: List[int] = list(range(self.max_slots))
+        self._used: set = set()
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, max_slots: int, max_len: int,
+               window_override: Optional[int] = None) -> "KVSlotPool":
+        if max_slots <= 0:
+            raise ValueError("max_slots must be positive")
+        arena = D.init_cache(cfg, max_slots, max_len, window_override)
+        return cls(arena, max_slots)
+
+    # ------------------------------------------------------------ free list
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_used / self.max_slots
+
+    def alloc(self) -> int:
+        """Claim the lowest free slot, zeroing its cache and position."""
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.max_slots} slots in use (gate admission on "
+                "n_free)")
+        slot = self._free.pop(0)
+        self._used.add(slot)
+        self.positions[slot] = 0
+        self.arena = _zero_slot(self.arena, jnp.int32(slot))
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Evict a completed request's slot back to the free list."""
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._used.remove(slot)
+        self.positions[slot] = 0
+        # keep the free list sorted so allocation order is deterministic
+        self._free = sorted(self._free + [slot])
+
+    # -------------------------------------------------------- slot slicing
+
+    def read_slot(self, slot: int) -> Pytree:
+        """Batch-1 view of one slot's cache (for chunked prefill)."""
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        return _gather_slot(self.arena, jnp.int32(slot))
+
+    def write_slot(self, slot: int, slot_cache: Pytree) -> None:
+        if slot not in self._used:
+            raise ValueError(f"slot {slot} is not allocated")
+        self.arena = _scatter_slot(self.arena, slot_cache, jnp.int32(slot))

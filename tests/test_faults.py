@@ -32,7 +32,7 @@ from repro.core import graph as G
 from repro.core import loop
 from repro.core.baselines import REGISTRY
 from repro.core.faults import (FAULT_COUNTER_NAMES, CompiledFaults,
-                               CrashWindow, FaultSchedule,
+                               CrashWindow, FaultSchedule, mask_and_absorb,
                                mask_and_renormalize)
 from repro.core.frodo import FrodoConfig, frodo
 
@@ -141,6 +141,89 @@ def test_validate_b_connectivity():
     # total blackout is never B-connected, for any window
     dark = _compile(link_drop=1.0, K=6)
     assert not dark.validate(6)
+
+
+# ------------------------------------------------- symmetric drop mode
+
+def test_symmetric_mode_stays_doubly_stochastic():
+    """Undirected failures with mass-to-diagonal absorption keep every W_t
+    symmetric, nonnegative, and doubly stochastic — the property that kills
+    the mean-drift floor of the directed model."""
+    c = _compile(link_drop=0.5, seed=3, K=32, drop_mode="symmetric")
+    np.testing.assert_allclose(c.W_seq.sum(axis=-1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(c.W_seq.sum(axis=-2), 1.0, atol=1e-12)
+    assert c.W_seq.min() >= 0.0
+    np.testing.assert_allclose(c.W_seq, np.swapaxes(c.W_seq, -1, -2),
+                               atol=1e-12)
+
+
+def test_symmetric_mode_drops_both_directions():
+    c = _compile(link_drop=0.5, seed=7, K=16, drop_mode="symmetric")
+    assert c.links_dropped.max() > 0
+    # an undirected failure takes both directed edges at once
+    assert (c.links_dropped % 2 == 0).all()
+    for k in range(c.n_steps):
+        zeros = c.W_seq[k] == 0.0
+        np.testing.assert_array_equal(zeros, zeros.T)
+
+
+def test_symmetric_mode_conserves_network_mean():
+    """Pure consensus x <- W_t x: the symmetric masks conserve the network
+    mean bit-for-bit-tight (double stochasticity); the directed masks
+    random-walk it — the drift documented in docs/robustness.md."""
+    rng = np.random.default_rng(0)
+    x0 = rng.normal(size=(4, 3))
+    for mode, drift_free in (("symmetric", True), ("directed", False)):
+        c = _compile(link_drop=0.4, seed=5, K=60, drop_mode=mode)
+        x = x0.copy()
+        for k in range(c.n_steps):
+            x = c.W_seq[k] @ x
+        err = np.abs(x.mean(axis=0) - x0.mean(axis=0)).max()
+        if drift_free:
+            assert err < 1e-12, err
+        else:
+            assert err > 1e-6, "directed drops should drift the mean"
+
+
+def test_symmetric_mode_crash_keeps_double_stochasticity():
+    c = _compile(K=8, link_drop=0.3, drop_mode="symmetric", seed=1,
+                 crashes=(CrashWindow(agent=2, start=2, stop=6),))
+    np.testing.assert_allclose(c.W_seq.sum(axis=-1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(c.W_seq.sum(axis=-2), 1.0, atol=1e-12)
+    np.testing.assert_array_equal(c.W_seq[3][2], np.eye(4)[2])
+
+
+def test_mask_and_absorb_direct():
+    W = G.metropolis_weights(G.complete(3))
+    keep = np.ones((3, 3))
+    keep[0, 1] = keep[1, 0] = 0.0            # undirected link 0-1 fails
+    W_t, isolated = mask_and_absorb(W, keep)
+    assert W_t[0, 1] == W_t[1, 0] == 0.0
+    np.testing.assert_allclose(W_t[0, 0], W[0, 0] + W[0, 1])
+    np.testing.assert_allclose(W_t[1, 1], W[1, 1] + W[1, 0])
+    np.testing.assert_allclose(W_t[2], W[2])
+    np.testing.assert_array_equal(isolated, [False, False, False])
+    np.testing.assert_allclose(W_t.sum(axis=0), 1.0)
+    np.testing.assert_allclose(W_t.sum(axis=1), 1.0)
+
+
+def test_symmetric_mode_rejects_asymmetric_W():
+    sched = FaultSchedule(link_drop=0.2, drop_mode="symmetric")
+    with pytest.raises(ValueError, match="symmetric base W"):
+        sched.compile(G.ring(4, directed=True), 4)
+
+
+def test_drop_mode_validated():
+    with pytest.raises(ValueError, match="drop_mode"):
+        FaultSchedule(drop_mode="bogus")
+
+
+def test_directed_mode_draws_unchanged_by_mode_field():
+    """The symmetric-mode refactor must not move the directed draws — the
+    committed exp3 golden baseline pins them."""
+    a = _compile(link_drop=0.4, seed=7)
+    b = _compile(link_drop=0.4, seed=7, drop_mode="directed")
+    assert a.W_seq.tobytes() == b.W_seq.tobytes()
 
 
 # ----------------------------------------------------------- equivalences

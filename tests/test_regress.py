@@ -313,3 +313,40 @@ def test_committed_train_baseline_passes():
     diffs = cli.check("train", cli.DEFAULT_BASELINE_DIR, R.Tolerance(),
                       seed=None, steps=None, include_timing=False)
     assert diffs and all(d.passed for d in diffs), R.format_report(diffs)
+
+
+@pytest.mark.regression
+def test_serve_record_check_roundtrip_and_determinism(tmp_path):
+    from benchmarks import regress as cli
+    from benchmarks.serve_bench import SERVE_VOLATILE_KEYS
+    d1, d2 = str(tmp_path / "b1"), str(tmp_path / "b2")
+    cli.record("serve", d1, seed=0, steps=6)
+    diffs = cli.check("serve", d1, R.Tolerance(), seed=None, steps=None,
+                      include_timing=True)
+    assert diffs and all(d.passed for d in diffs), R.format_report(diffs)
+    # scheduling trace and greedy token checksums are byte-stable across
+    # recordings — the property the committed baseline leans on
+    cli.record("serve", d2, seed=0, steps=6)
+    b1 = R.load_baseline(cli.baseline_path(d1, "serve"))
+    b2 = R.load_baseline(cli.baseline_path(d2, "serve"))
+    for label, entry in b1["series"].items():
+        assert entry["metrics"] == b2["series"][label]["metrics"], label
+    # one series per record kind, wall-clock counters filtered
+    step_label = [l for l in b1["series"] if "serve.step" in l]
+    req_label = [l for l in b1["series"] if "serve.request" in l]
+    assert len(step_label) == 1 and len(req_label) == 1
+    req = b1["series"][req_label[0]]
+    for vol in SERVE_VOLATILE_KEYS:
+        assert vol not in req["metrics"] and vol not in req["timing"]
+    assert {"ttft_steps", "token_sum", "token_last"} <= set(req["metrics"])
+    step = b1["series"][step_label[0]]
+    assert {"queue_depth", "occupancy", "admitted"} <= set(step["metrics"])
+    assert "step_time_ms" in step["timing"]
+
+
+@pytest.mark.regression
+def test_committed_serve_baseline_passes():
+    from benchmarks import regress as cli
+    diffs = cli.check("serve", cli.DEFAULT_BASELINE_DIR, R.Tolerance(),
+                      seed=None, steps=None, include_timing=False)
+    assert diffs and all(d.passed for d in diffs), R.format_report(diffs)

@@ -1,9 +1,11 @@
-"""Telemetry contract tests for the serving engine (serving/engine.py).
+"""Telemetry contract tests for the serving stack (engine + scheduler).
 
-The engine's ``last_stats`` dict and its per-call ``serve.generate`` sink
-records are consumed by the observability pipeline and dashboards; these
-tests pin the schema (exact key set, numeric types, sane values) so a
-refactor cannot silently drop a counter the JSONL consumers expect.
+The engine's ``last_stats`` dict and the sink records — ``serve.generate``
+per Engine call, ``serve.step`` per scheduling round, ``serve.request``
+per completion — are consumed by the observability pipeline, dashboards,
+and the golden serve baseline; these tests pin the schemas (exact key
+sets, numeric types, sane values) so a refactor cannot silently drop a
+counter the JSONL consumers expect.
 """
 import numpy as np
 import pytest
@@ -12,9 +14,14 @@ from repro import obs
 from repro.configs import registry as REG
 from repro.models import transformer as T
 from repro.serving.engine import Engine
+from repro.serving.scheduler import REQUEST_RECORD_KEYS, STEP_RECORD_KEYS
 
 LAST_STATS_KEYS = {"batch", "prompt_len", "new_tokens", "prefill_ms",
                    "decode_ms", "decode_ms_per_token", "decode_tokens_per_s"}
+
+
+def _named(records, name):
+    return [r for r in records if r["name"] == name]
 
 
 @pytest.fixture(scope="module")
@@ -45,15 +52,56 @@ def test_generate_sink_record_schema(engine_and_sink):
     n_before = len(sink.records)
     eng.generate(np.array([[9, 8]], np.int32), n_new=3)
     eng.generate(np.array([[7, 6]], np.int32), n_new=3)
-    recs = sink.records[n_before:]
+    recs = _named(sink.records[n_before:], "serve.generate")
     assert len(recs) == 2
     for rec in recs:
-        assert rec["name"] == "serve.generate"
         assert set(rec) == {"name", "step"} | LAST_STATS_KEYS
         for k in LAST_STATS_KEYS:
             assert isinstance(rec[k], (int, float)), k
     # step is the per-engine call counter: monotone, +1 per generate
     assert recs[1]["step"] == recs[0]["step"] + 1
+
+
+def test_step_record_schema(engine_and_sink):
+    """Every scheduling round writes one serve.step record with the pinned
+    queue/occupancy/throughput counters."""
+    eng, sink = engine_and_sink
+    n_before = len(sink.records)
+    eng.generate(np.array([[3, 1, 4], [1, 5, 9]], np.int32), n_new=3)
+    steps = _named(sink.records[n_before:], "serve.step")
+    assert len(steps) >= 2
+    for rec in steps:
+        assert tuple(rec) == STEP_RECORD_KEYS
+        for k in STEP_RECORD_KEYS[1:-1]:
+            assert isinstance(rec[k], int) and rec[k] >= 0, k
+        assert isinstance(rec["step_time_ms"], float)
+        assert rec["occupancy"] + rec["free_slots"] == eng.max_slots
+    # both prompts fit the pool: admitted together, decoded as a batch
+    assert max(r["occupancy"] for r in steps) == 2
+    # the engine drains its batch before returning
+    assert steps[-1]["queue_depth"] == 0 and steps[-1]["occupancy"] == 0
+    # step counter is monotone across generate() calls (shared scheduler)
+    assert [r["step"] for r in steps] == list(
+        range(steps[0]["step"], steps[0]["step"] + len(steps)))
+
+
+def test_request_record_schema(engine_and_sink):
+    """Request completions write one serve.request record each, carrying
+    TTFT (steps and wall ms) and the deterministic token checksum."""
+    eng, sink = engine_and_sink
+    n_before = len(sink.records)
+    out = eng.generate(np.array([[2, 7, 1, 8]], np.int32), n_new=4)
+    reqs = _named(sink.records[n_before:], "serve.request")
+    assert len(reqs) == 1
+    rec = reqs[0]
+    assert tuple(rec) == REQUEST_RECORD_KEYS
+    assert rec["prompt_len"] == 4 and rec["new_tokens"] == 4
+    assert rec["queue_steps"] >= 0
+    assert rec["ttft_steps"] >= 1
+    assert rec["ttft_ms"] >= 0.0 and rec["e2e_ms"] >= rec["ttft_ms"]
+    # the checksum keys pin actual token ids, not just counts
+    assert rec["token_sum"] == int(out.sum())
+    assert rec["token_last"] == int(out[0, -1])
 
 
 def test_last_stats_reset_each_call(engine_and_sink):
@@ -67,8 +115,9 @@ def test_last_stats_reset_each_call(engine_and_sink):
 
 
 def test_records_jsonl_roundtrip(tmp_path, engine_and_sink):
-    """serve.generate records written through JsonlSink parse back with the
-    schema intact — the format the golden-run tooling reads."""
+    """The full serving stream (generate + step + request records) written
+    through JsonlSink parses back with the schemas intact — the format the
+    golden-run tooling reads."""
     eng, _ = engine_and_sink
     path = str(tmp_path / "serve.jsonl")
     jsink = obs.JsonlSink(path)
@@ -76,6 +125,11 @@ def test_records_jsonl_roundtrip(tmp_path, engine_and_sink):
     eng2.generate(np.array([[5, 4, 3]], np.int32), n_new=2)
     jsink.close()
     rows = obs.read_jsonl(path)
-    assert len(rows) == 1
-    assert rows[0]["name"] == "serve.generate" and rows[0]["step"] == 0
-    assert set(rows[0]) == {"name", "step"} | LAST_STATS_KEYS
+    gen = _named(rows, "serve.generate")
+    assert len(gen) == 1
+    assert gen[0]["step"] == 0
+    assert set(gen[0]) == {"name", "step"} | LAST_STATS_KEYS
+    assert all(tuple(r) == STEP_RECORD_KEYS
+               for r in _named(rows, "serve.step"))
+    reqs = _named(rows, "serve.request")
+    assert len(reqs) == 1 and tuple(reqs[0]) == REQUEST_RECORD_KEYS
