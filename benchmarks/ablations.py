@@ -8,19 +8,30 @@
    O(Tn) buffer, for K ∈ {2,4,6,8,12}.
 3. **consensus interval H** — the beyond-paper local-steps schedule:
    convergence degradation as mixing becomes sparser (DiLoCo-flavored).
+4. **expsum accumulator dtype (bf16 vs f32)** — same dynamics, K EMA
+   accumulators held in bfloat16 (half the memory-state bytes): per-step
+   ``memory_norm``/``consensus_error``/``error`` JSONL plus host-timed
+   ``phase_update_ms``/``phase_mix_ms`` columns (``--dtype-jsonl``), so
+   the accuracy floor AND the per-phase cost land in one stream
+   ``repro.obs.report`` can break down.  Conclusion recorded in
+   docs/observability.md.
 
-    PYTHONPATH=src python benchmarks/ablations.py
+    PYTHONPATH=src python benchmarks/ablations.py [--only dtype]
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import graph as G, loop, memory as fmem
-from repro.core.frodo import FrodoConfig, frodo
+from repro.core.frodo import FrodoConfig, apply_updates, frodo
 
 TOL = 1e-6
 K_MAX = 4000
@@ -103,12 +114,118 @@ def consensus_interval():
     return {f"H={h}": _iters(opt(), obj, interval=h) for h in (1, 2, 4, 8)}
 
 
+def expsum_dtype(jsonl_path=None, steps=800, K_acc=8):
+    """bf16 vs f32 expsum accumulators, instrumented per step.
+
+    Runs the same ill-conditioned quadratic through an *unjitted* per-round
+    host loop with separately jitted update/mix stages, so the per-phase
+    wall split is host-observable: each JSONL row carries ``error``,
+    ``memory_norm``, ``consensus_error(_pre_mix)`` plus
+    ``phase_update_ms``/``phase_mix_ms``/``phase_metrics_ms`` columns and
+    their ``step_time_ms`` total (``repro.obs.report`` renders the
+    breakdown per variant).  With a ``SpanRecorder`` installed the same
+    stages land as ``ablate.dtype/ablate.update`` ... spans.
+    """
+    obj = _objective(100.0)
+    W = jnp.asarray(G.xiao_boyd_weights(G.complete(4)), jnp.float32)
+    x0 = jnp.tile(jnp.asarray([0.5, 0.86], jnp.float32), (4, 1))
+    from repro.core import consensus as C
+    ids = jnp.arange(4)
+    grad = jax.vmap(jax.grad(obj), in_axes=(0, 0))
+    sink = obs.JsonlSink(jsonl_path) if jsonl_path else None
+    rows = {}
+    for dtype in ("float32", "bfloat16"):
+        opt = frodo(FrodoConfig(alpha=0.8, beta=0.35, lam=0.15, T=90,
+                                memory_mode="expsum", K=K_acc,
+                                acc_dtype=dtype, collect_metrics=True))
+
+        @jax.jit
+        def grad_update(xs, state):
+            g = grad(xs, ids)
+            d, state = opt.update(g, state, xs)
+            return apply_updates(xs, d), state
+
+        @jax.jit
+        def mix(xs):
+            return C.mix_stacked(xs, W, with_metrics=True)
+
+        xs, state = x0, opt.init(x0)
+        # warm both compiled stages so phase columns time steady-state work
+        jax.block_until_ready(grad_update(xs, state))
+        jax.block_until_ready(mix(xs))
+        errs = np.empty(steps)
+        with obs.span("ablate.dtype", variant=dtype):
+            for k in range(steps):
+                t0 = time.perf_counter()
+                if k > 0:           # Algorithm 1 skips the k=0 update
+                    with obs.span("ablate.update"):
+                        xs, state = jax.block_until_ready(
+                            grad_update(xs, state))
+                t1 = time.perf_counter()
+                with obs.span("ablate.mix"):
+                    xs, caux = jax.block_until_ready(mix(xs))
+                t2 = time.perf_counter()
+                with obs.span("ablate.metrics"):
+                    err = float(np.mean(np.linalg.norm(
+                        np.asarray(xs), axis=-1)))
+                    errs[k] = err
+                    if sink is not None:
+                        t3 = time.perf_counter()
+                        sink.write({
+                            "exp": "ablate_expsum_dtype", "variant": dtype,
+                            "step": k, "error": err,
+                            "memory_norm":
+                                float(state["metrics"]["memory_norm"]),
+                            "consensus_error":
+                                float(caux["consensus_error_post"]),
+                            "consensus_error_pre_mix":
+                                float(caux["consensus_error_pre"]),
+                            "step_time_ms": round((t3 - t0) * 1e3, 6),
+                            "phase_update_ms": round((t1 - t0) * 1e3, 6),
+                            "phase_mix_ms": round((t2 - t1) * 1e3, 6),
+                            "phase_metrics_ms": round((t3 - t2) * 1e3, 6),
+                        })
+        acc_bytes = {"float32": 4, "bfloat16": 2}[dtype] * K_acc
+        rows[dtype] = {
+            "iters_to_1e-2": loop.iterations_to_tol(errs, 1e-2),
+            "iters_to_1e-3": loop.iterations_to_tol(errs, 1e-3),
+            "iters_to_1e-6": loop.iterations_to_tol(errs, TOL),
+            "floor_error": float(errs[steps // 2:].min()),
+            "final_error": float(errs[-1]),
+            "final_memory_norm": float(state["metrics"]["memory_norm"]),
+            "acc_bytes_per_param": acc_bytes,
+        }
+    if sink is not None:
+        sink.close()
+    return rows
+
+
+ARMS = {"lambda": ("lambda_sensitivity", lambda a: lambda_sensitivity()),
+        "expsum_K": ("expsum_K", lambda a: expsum_K()),
+        "interval": ("consensus_interval_H",
+                     lambda a: consensus_interval()),
+        "dtype": ("expsum_dtype",
+                  lambda a: expsum_dtype(jsonl_path=a.dtype_jsonl or None,
+                                         steps=a.dtype_steps))}
+
+
 def main():
-    out = {"lambda_sensitivity": lambda_sensitivity(),
-           "expsum_K": expsum_K(),
-           "consensus_interval_H": consensus_interval()}
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/ablations.json", "w") as f:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="+", choices=sorted(ARMS), default=None,
+                    help="run a subset of ablation arms")
+    ap.add_argument("--out", default="experiments/ablations.json")
+    ap.add_argument("--dtype-jsonl",
+                    default="experiments/ablate_dtype.jsonl",
+                    help="per-step JSONL for the dtype arm ('' disables)")
+    ap.add_argument("--dtype-steps", type=int, default=800)
+    args = ap.parse_args()
+    arms = args.only or sorted(ARMS)
+    out = {}
+    for arm in arms:
+        key, fn = ARMS[arm]
+        out[key] = fn(args)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(json.dumps(out, indent=1))
 

@@ -155,15 +155,22 @@ def write_metrics_jsonl(path, steps=600, x0=(1.0, 0.0),
             va, vb, vl, vt = variant_params(
                 v, np.float32(alpha), np.float32(beta),
                 np.float32(lam), np.float32(T))
-            jax.block_until_ready(trace(x0j, va, vb, vl, vt, steps))  # warmup
-            t0 = time.perf_counter()
-            mets = jax.block_until_ready(trace(x0j, va, vb, vl, vt, steps))
-            ms_per_step = (time.perf_counter() - t0) * 1e3 / steps
-            host = {k: np.asarray(a) for k, a in mets.items()}
-            for s in range(steps):
-                sink.write({"exp": "exp1_quadratic", "variant": v, "step": s,
-                            "step_time_ms": round(ms_per_step, 6),
-                            **{k: float(a[s]) for k, a in host.items()}})
+            with obs.span("exp1.compile", variant=v):
+                jax.block_until_ready(
+                    trace(x0j, va, vb, vl, vt, steps))    # warmup
+            with obs.span("exp1.execute", variant=v):
+                t0 = time.perf_counter()
+                mets = jax.block_until_ready(
+                    trace(x0j, va, vb, vl, vt, steps))
+                ms_per_step = (time.perf_counter() - t0) * 1e3 / steps
+            with obs.span("exp1.drain", variant=v):
+                host = {k: np.asarray(a) for k, a in mets.items()}
+                for s in range(steps):
+                    sink.write({"exp": "exp1_quadratic", "variant": v,
+                                "step": s,
+                                "step_time_ms": round(ms_per_step, 6),
+                                **{k: float(a[s])
+                                   for k, a in host.items()}})
     return path
 
 

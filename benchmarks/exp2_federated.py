@@ -91,8 +91,9 @@ def run_one(name: str, seed: int, steps: int, telemetry: bool = False):
     """Returns (losses, accs) arrays; with ``telemetry=True`` returns
     (losses, accs, tel) where ``tel`` holds per-step consensus error,
     grad/memory norms, and the measured average step_time_ms."""
-    X, y = make_classification(n_per_class=200, n_agents=N_AGENTS,
-                               seed=seed, noise=2.0)
+    with obs.span("exp2.data", seed=seed):
+        X, y = make_classification(n_per_class=200, n_agents=N_AGENTS,
+                                   seed=seed, noise=2.0)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     W = G.xiao_boyd_weights(G.complete(N_AGENTS))
     opt = make_optimizer(name, telemetry=telemetry)
@@ -130,10 +131,12 @@ def run_one(name: str, seed: int, steps: int, telemetry: bool = False):
             params = C.mix_stacked(params, W)
         return (params, opt_state), out
 
-    t0 = time.perf_counter()
-    (params, _), outs = jax.lax.scan(step_fn, (params, opt_state), idx)
-    outs = jax.block_until_ready(outs)
-    ms_per_step = (time.perf_counter() - t0) * 1e3 / steps  # incl. compile
+    sp = obs.span("exp2.scan", method=name, seed=seed, steps=steps)
+    with sp:
+        t0 = time.perf_counter()
+        (params, _), outs = jax.lax.scan(step_fn, (params, opt_state), idx)
+        outs = sp.sync(jax.block_until_ready(outs))
+        ms_per_step = (time.perf_counter() - t0) * 1e3 / steps  # incl. compile
     if telemetry:
         losses, accs, tel = outs
         tel = {k: np.asarray(v) for k, v in tel.items()}

@@ -216,9 +216,10 @@ def run_experiment(seed=0, quad_steps=2000, fed_steps=150, out=None,
         qrow, frow = {}, {}
         for m in METHODS:
             t0 = time.perf_counter()
-            res = run_quadratic(m, drop, quad_steps, seed,
-                                collect_metrics=sink is not None,
-                                drop_mode=drop_mode)
+            with obs.span("exp3.quadratic", method=m, drop=tag):
+                res = run_quadratic(m, drop, quad_steps, seed,
+                                    collect_metrics=sink is not None,
+                                    drop_mode=drop_mode)
             ms = (time.perf_counter() - t0) * 1e3 / max(quad_steps, 1)
             qrow[m] = {"iters_to_tol": iters_to_tol(res["errors"]),
                        "final_error": float(res["errors"][-1]),
@@ -244,8 +245,9 @@ def run_experiment(seed=0, quad_steps=2000, fed_steps=150, out=None,
                         "step_time_ms":
                             round(ms + float(res["jitter_ms"][s]), 6),
                     })
-            fed = run_federated(m, drop, fed_steps, seed,
-                                drop_mode=drop_mode)
+            with obs.span("exp3.federated", method=m, drop=tag):
+                fed = run_federated(m, drop, fed_steps, seed,
+                                    drop_mode=drop_mode)
             frow[m] = {"final_loss": float(fed["loss"][-1]),
                        "final_acc": float(fed["acc"][-1])}
             if sink is not None:

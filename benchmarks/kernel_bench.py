@@ -13,15 +13,19 @@ import numpy as np
 
 from repro.core import memory as fmem
 from repro.kernels import ops, ref
+from repro.obs.spans import span
 
 
-def _time(fn, *args, reps=2):
-    fn(*args)                                    # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+def _time(fn, *args, reps=2, name="kernel"):
+    with span(f"kernel_bench.{name}.warmup"):
+        fn(*args)                                # compile/warm
+    with span(f"kernel_bench.{name}", reps=reps):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+    return dt / reps * 1e6
 
 
 def traffic_model(n, T=None, K=None, itemsize=4):
@@ -46,9 +50,10 @@ def rows(seed=0):
         cur = jnp.int32(3)
         jr = jax.jit(lambda g, h: ref.frodo_update_ref(g, h, cur, w, 0.8,
                                                        0.35))
-        us_ref = _time(jr, g, hist)
+        us_ref = _time(jr, g, hist, name=f"exact_jnp_n{n}")
         us_ker = _time(lambda g, h: ops.frodo_update(g, h, cur, w, 0.8,
-                                                     0.35), g, hist)
+                                                     0.35), g, hist,
+                       name=f"exact_pallas_n{n}")
         fused, unfused = traffic_model(n, T=T)
         out.append((f"frodo_exact_jnp_n{n}", us_ref, f"hbm_bytes={unfused}"))
         out.append((f"frodo_exact_pallas_n{n}(interp)", us_ker,
@@ -59,9 +64,10 @@ def rows(seed=0):
         coeffs = jnp.asarray(coeffs, jnp.float32)
         jr2 = jax.jit(lambda g, a: ref.frodo_expsum_update_ref(
             g, a, rates, coeffs, 0.8, 0.35))
-        us_ref2 = _time(jr2, g, acc)
+        us_ref2 = _time(jr2, g, acc, name=f"expsum_jnp_n{n}")
         us_ker2 = _time(lambda g, a: ops.frodo_expsum_update(
-            g, a, rates, coeffs, 0.8, 0.35), g, acc)
+            g, a, rates, coeffs, 0.8, 0.35), g, acc,
+            name=f"expsum_pallas_n{n}")
         fused, unfused = traffic_model(n, K=K)
         out.append((f"frodo_expsum_jnp_n{n}", us_ref2,
                     f"hbm_bytes={unfused}"))

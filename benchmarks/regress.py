@@ -41,9 +41,11 @@ DEFAULT_STEPS = {"exp1": 150, "exp2": 40, "exp3": 400, "train": 12,
                  "serve": 8}
 
 #: trainer sink counters that are pure wall-clock (monotone / machine
-#: dependent) — dropped from the train baseline; step_time_ms stays and is
-#: compared as a percentile band like every other timing key
-TRAIN_VOLATILE_KEYS = ("wall_s", "throughput_items_per_s")
+#: dependent) — dropped from the train baseline; step_time_ms and the
+#: per-phase phase_*_ms columns stay and are compared as percentile bands
+#: like every other timing key
+TRAIN_VOLATILE_KEYS = ("wall_s", "throughput_items_per_s",
+                       "throughput_items_per_s_instant")
 
 
 def run_exp1(jsonl_path: str, seed: int, steps: int) -> None:
@@ -154,8 +156,9 @@ def main() -> int:
     ap.add_argument("--max-violation-frac", type=float, default=0.02,
                     help="fraction of points allowed outside tolerance")
     ap.add_argument("--timing-ratio", type=float, default=10.0,
-                    help="fail when step_time_ms p50 exceeds baseline "
-                         "p50 by this factor")
+                    help="fail when a timing metric's p50 (step_time_ms "
+                         "or any phase_*_ms) exceeds baseline p50 by this "
+                         "factor; CI passes 5 (see docs/observability.md)")
     ap.add_argument("--no-timing", action="store_true",
                     help="skip the step_time_ms band (trajectories only)")
     ap.add_argument("--report", default=None, metavar="PATH",

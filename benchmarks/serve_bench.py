@@ -10,9 +10,11 @@ wall-clock counters stripped):
 Everything left in the stream is deterministic for a given seed — queue
 depths, occupancy, admission counts, per-request TTFT in scheduler steps,
 and the token-id checksums (``token_sum``/``token_last``) that pin the
-actual greedy outputs.  ``step_time_ms`` stays and is compared as a
-percentile band.  ``benchmarks/regress.py --record/--check --exp serve``
-maintains the committed baseline (benchmarks/baselines/serve.json).
+actual greedy outputs.  ``step_time_ms`` and the per-phase ``phase_*_ms``
+columns stay and are compared as one-sided percentile bands (a regression
+confined to prefill or decode trips its own band).
+``benchmarks/regress.py --record/--check --exp serve`` maintains the
+committed baseline (benchmarks/baselines/serve.json).
 """
 from __future__ import annotations
 

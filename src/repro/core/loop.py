@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.core import consensus
 from repro.core.frodo import Optimizer, apply_updates
+from repro.obs.spans import span
+from repro.obs.timing import trace_scope
 
 
 def run_jax(objective, x0, opt, W, K, x_star=None, faults=None,
@@ -49,11 +51,13 @@ def run_jax(objective, x0, opt, W, K, x_star=None, faults=None,
 
         def update(args):
             xs, opt_state = args
-            g = grad_fn(xs, agent_ids)
+            with trace_scope("loop.gradient"):
+                g = grad_fn(xs, agent_ids)
             if faults is not None:
                 u = u_seq[jnp.mod(k, u_seq.shape[0])]
                 g = g * u[:, None].astype(g.dtype)
-            delta, opt_state = opt.update(g, opt_state, xs)
+            with trace_scope("loop.memory_update"):
+                delta, opt_state = opt.update(g, opt_state, xs)
             if faults is not None:
                 delta = jax.tree.map(
                     lambda d: d * u[:, None].astype(d.dtype), delta)
@@ -61,12 +65,13 @@ def run_jax(objective, x0, opt, W, K, x_star=None, faults=None,
 
         xs, opt_state = jax.lax.cond(
             k > 0, update, lambda a: a, (xs, opt_state))
-        if faults is not None:
-            mixed = consensus.mix_time_varying(
-                xs, W_seq, k, with_metrics=collect_metrics)
-        else:
-            mixed = consensus.mix_stacked(xs, W,
-                                          with_metrics=collect_metrics)
+        with trace_scope("loop.mix"):
+            if faults is not None:
+                mixed = consensus.mix_time_varying(
+                    xs, W_seq, k, with_metrics=collect_metrics)
+            else:
+                mixed = consensus.mix_stacked(xs, W,
+                                              with_metrics=collect_metrics)
         aux = {}
         if collect_metrics:
             xs, caux = mixed
@@ -109,19 +114,27 @@ def run(objective: Callable[[jax.Array, jax.Array], jax.Array],
     ``collect_metrics=True`` adds per-round ``consensus_error`` /
     ``consensus_error_pre_mix`` traces in either mode.
     """
-    outs = run_jax(objective, x0, opt, W, K, x_star, faults=faults,
-                   collect_metrics=collect_metrics)
-    if collect_metrics:
-        xs, errs, fvals, aux = outs
-    else:
-        xs, errs, fvals = outs
-    result = {"x": xs, "errors": np.asarray(errs), "f": np.asarray(fvals)}
-    if collect_metrics:
-        result.update({k: np.asarray(v) for k, v in aux.items()})
-    if faults is not None:
-        idx = np.arange(K) % faults.n_steps
-        result.update({k: np.asarray(v)[idx]
-                       for k, v in faults.counter_arrays().items()})
+    with span("loop.run", agents=int(x0.shape[0]), rounds=int(K)):
+        sp = span("loop.execute")
+        with sp:
+            # sync() is a no-op without a recorder; with one, the wait for
+            # the scanned rounds lands inside loop.execute, not loop.drain
+            outs = sp.sync(run_jax(objective, x0, opt, W, K, x_star,
+                                   faults=faults,
+                                   collect_metrics=collect_metrics))
+        with span("loop.drain"):
+            if collect_metrics:
+                xs, errs, fvals, aux = outs
+            else:
+                xs, errs, fvals = outs
+            result = {"x": xs, "errors": np.asarray(errs),
+                      "f": np.asarray(fvals)}
+            if collect_metrics:
+                result.update({k: np.asarray(v) for k, v in aux.items()})
+            if faults is not None:
+                idx = np.arange(K) % faults.n_steps
+                result.update({k: np.asarray(v)[idx]
+                               for k, v in faults.counter_arrays().items()})
     return result
 
 

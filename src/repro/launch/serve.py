@@ -22,13 +22,21 @@ def run_traffic(arch: str = "mamba2-780m", smoke: bool = True,
                 max_slots: int = 4, prefill_chunk: int = 8,
                 token_budget: int = 32, max_len: int = 64,
                 seed: int = 0, metrics_out: Optional[str] = None,
-                quiet: bool = False) -> Dict[str, Any]:
+                quiet: bool = False, profile_dir: str = "",
+                profile_start: int = 0, profile_stop: int = 4,
+                spans_out: str = "") -> Dict[str, Any]:
     """Seeded Poisson-arrival workload; returns a summary dict.
 
     Per scheduler step, ``Poisson(rate)`` new requests arrive (capped at
     ``n_requests`` total); each draws its prompt tokens, prompt length, and
     ``max_new`` from the same generator.  ``metrics_out`` captures the full
-    ``serve.step`` / ``serve.request`` telemetry stream as JSONL.
+    ``serve.step`` / ``serve.request`` telemetry stream as JSONL (each
+    ``serve.step`` row carries the per-phase ``phase_*_ms`` split —
+    ``python -m repro.obs.report`` renders the breakdown).
+
+    ``profile_dir`` captures a ``jax.profiler`` device trace over
+    scheduler steps ``[profile_start, profile_stop]``; ``spans_out``
+    writes the host-side phase spans as a Perfetto-loadable Chrome trace.
     """
     import jax
     import numpy as np
@@ -49,24 +57,39 @@ def run_traffic(arch: str = "mamba2-780m", smoke: bool = True,
     n_submitted = 0
     max_occ = 0
     max_queue = 0
-    while n_submitted < n_requests or sch.has_work:
-        if n_submitted < n_requests:
-            for _ in range(int(rng.poisson(rate))):
-                if n_submitted >= n_requests:
-                    break
-                plen = int(rng.integers(*prompt_len_range, endpoint=True))
-                n_new = int(rng.integers(*new_tokens_range, endpoint=True))
-                prompt = rng.integers(1, cfg.vocab, plen).astype(np.int32)
-                frames = None
-                if cfg.family == "audio":
-                    frames = rng.normal(size=(cfg.n_frames, cfg.d_model)
-                                        ).astype(np.float32)
-                rids.append(sch.submit(prompt, n_new, frames=frames))
-                n_submitted += 1
-        if sch.has_work:
-            rec = sch.step()
-            max_occ = max(max_occ, rec["occupancy"])
-            max_queue = max(max_queue, rec["queue_depth"])
+    prof = obs.ProfileWindow(profile_dir or None, profile_start,
+                             profile_stop)
+    recorder = obs.SpanRecorder() if spans_out else None
+    prev = obs.set_recorder(recorder) if recorder is not None else None
+    try:
+        while n_submitted < n_requests or sch.has_work:
+            if n_submitted < n_requests:
+                for _ in range(int(rng.poisson(rate))):
+                    if n_submitted >= n_requests:
+                        break
+                    plen = int(rng.integers(*prompt_len_range,
+                                            endpoint=True))
+                    n_new = int(rng.integers(*new_tokens_range,
+                                             endpoint=True))
+                    prompt = rng.integers(1, cfg.vocab,
+                                          plen).astype(np.int32)
+                    frames = None
+                    if cfg.family == "audio":
+                        frames = rng.normal(size=(cfg.n_frames, cfg.d_model)
+                                            ).astype(np.float32)
+                    rids.append(sch.submit(prompt, n_new, frames=frames))
+                    n_submitted += 1
+            if sch.has_work:
+                prof.maybe_start(sch.step_idx)
+                rec = sch.step()
+                prof.maybe_stop(rec["step"])
+                max_occ = max(max_occ, rec["occupancy"])
+                max_queue = max(max_queue, rec["queue_depth"])
+    finally:
+        prof.close()
+        if recorder is not None:
+            obs.set_recorder(prev)
+            recorder.save(spans_out, process_name="repro.launch.serve")
     if metrics_out:
         sink.close()
     reqs = [sch.done[r] for r in rids]
@@ -128,6 +151,14 @@ def main():
     ap.add_argument("--token-budget", type=int, default=32)
     ap.add_argument("--metrics-out", default=None,
                     help="write serve.step/serve.request JSONL here")
+    ap.add_argument("--profile-dir", default="",
+                    help="jax.profiler capture dir (device trace over the "
+                         "--profile-start..--profile-stop step window)")
+    ap.add_argument("--profile-start", type=int, default=0)
+    ap.add_argument("--profile-stop", type=int, default=4)
+    ap.add_argument("--spans-out", default="",
+                    help="write host-side phase spans as a Chrome trace "
+                         "JSON (open in Perfetto)")
     # legacy one-shot mode
     ap.add_argument("--batch", type=int, default=None,
                     help="run one static Engine.generate over this batch "
@@ -144,7 +175,11 @@ def main():
                     max_slots=args.max_slots,
                     prefill_chunk=args.prefill_chunk,
                     token_budget=args.token_budget, max_len=args.max_len,
-                    seed=args.seed, metrics_out=args.metrics_out)
+                    seed=args.seed, metrics_out=args.metrics_out,
+                    profile_dir=args.profile_dir,
+                    profile_start=args.profile_start,
+                    profile_stop=args.profile_stop,
+                    spans_out=args.spans_out)
 
 
 if __name__ == "__main__":

@@ -25,12 +25,21 @@ def run_training(arch: str = "h2o-danube-1.8b", smoke: bool = True,
                  memory_mode: str = "exact", topology: str = "complete",
                  consensus_interval: int = 1, ckpt_dir: str = "checkpoints",
                  metrics_out: str = "", collect_metrics: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, profile_dir: str = "",
+                 profile_start: int = 0, profile_stop: int = 4,
+                 spans_out: str = ""):
     """Run the training loop; returns the trainer (history attached).
 
     ``seed`` threads through both the parameter init and the synthetic
     token pipeline, so a fixed seed gives deterministic loss/grad-norm
     trajectories (the launch-train golden baseline relies on this).
+
+    ``profile_dir`` turns on a programmatic ``jax.profiler`` capture over
+    steps ``[profile_start, profile_stop]`` — the ``trace_scope`` /
+    ``StepTraceAnnotation`` tags land in a real device trace there.
+    ``spans_out`` records host-side phase spans (``train.data`` /
+    ``train.device_step`` / ``train.metrics``) and writes them as a
+    Chrome trace-event file for Perfetto / ``repro.obs.report``.
     """
     from repro import obs
     from repro.configs import registry as REG
@@ -49,15 +58,23 @@ def run_training(arch: str = "h2o-danube-1.8b", smoke: bool = True,
     tokens_per_step = agents * batch_per_agent * seq
     trainer = Trainer(cfg, tc, n_agents=agents,
                       ckpt_dir=ckpt_dir, log_every=5, sink=sink,
-                      tokens_per_step=tokens_per_step)
+                      tokens_per_step=tokens_per_step,
+                      profile_dir=profile_dir or None,
+                      profile_start=profile_start,
+                      profile_stop=profile_stop)
     state = trainer.init(seed=seed)
     data = augment_modalities(
         iter(TokenPipeline(vocab=cfg.vocab, seq_len=seq,
                            batch_per_agent=batch_per_agent,
                            n_agents=agents, seed=seed)), cfg)
+    recorder = obs.SpanRecorder() if spans_out else None
+    prev = obs.set_recorder(recorder) if recorder is not None else None
     try:
         trainer.run(state, data, steps)
     finally:
+        if recorder is not None:
+            obs.set_recorder(prev)
+            recorder.save(spans_out, process_name="repro.launch.train")
         if sink is not None:
             sink.close()
     return trainer
@@ -90,6 +107,14 @@ def main():
                          "--collect-metrics)")
     ap.add_argument("--collect-metrics", action="store_true",
                     help="compute consensus_error/memory_norm/... in-step")
+    ap.add_argument("--profile-dir", default="",
+                    help="jax.profiler capture dir (device trace over the "
+                         "--profile-start..--profile-stop step window)")
+    ap.add_argument("--profile-start", type=int, default=0)
+    ap.add_argument("--profile-stop", type=int, default=4)
+    ap.add_argument("--spans-out", default="",
+                    help="write host-side phase spans as a Chrome trace "
+                         "JSON (open in Perfetto)")
     args = ap.parse_args()
 
     if args.force_devices and "XLA_FLAGS" not in os.environ:
@@ -105,7 +130,10 @@ def main():
                  topology=args.topology,
                  consensus_interval=args.consensus_interval,
                  ckpt_dir=args.ckpt_dir, metrics_out=args.metrics_out,
-                 collect_metrics=args.collect_metrics, seed=args.seed)
+                 collect_metrics=args.collect_metrics, seed=args.seed,
+                 profile_dir=args.profile_dir,
+                 profile_start=args.profile_start,
+                 profile_stop=args.profile_stop, spans_out=args.spans_out)
 
 
 if __name__ == "__main__":

@@ -15,17 +15,24 @@ from repro.obs.metrics import (JsonlSink, MemorySink, MetricsSink, NullSink,
                                scalarize, set_sink, tree_sq_sum,
                                zeros_like_metrics)
 from repro.obs.regress import (MetricDiff, Tolerance, compare_to_baseline,
-                               format_report, load_baseline,
-                               load_trajectories, make_baseline,
-                               write_baseline)
-from repro.obs.timing import (StepTimer, annotate, step_annotation,
-                              trace_scope)
+                               format_report, is_timing_metric,
+                               load_baseline, load_trajectories,
+                               make_baseline, write_baseline)
+from repro.obs.spans import (PhaseStat, Span, SpanRecorder, aggregate,
+                             device_sync, get_recorder, set_recorder, span,
+                             span_paths, to_chrome_trace, to_records)
+from repro.obs.timing import (ProfileWindow, StepTimer, annotate,
+                              step_annotation, trace_scope)
 
 __all__ = [
     "JsonlSink", "MemorySink", "MetricDiff", "MetricsSink", "NullSink",
-    "StepTimer", "Tolerance", "annotate", "compare_to_baseline",
-    "consensus_error", "format_report", "frodo_step_metrics", "get_sink",
-    "global_norm", "load_baseline", "load_trajectories", "make_baseline",
-    "read_jsonl", "record", "scalarize", "set_sink", "step_annotation",
-    "trace_scope", "tree_sq_sum", "write_baseline", "zeros_like_metrics",
+    "PhaseStat", "ProfileWindow", "Span", "SpanRecorder", "StepTimer",
+    "Tolerance", "aggregate", "annotate", "compare_to_baseline",
+    "consensus_error", "device_sync", "format_report", "frodo_step_metrics",
+    "get_recorder", "get_sink", "global_norm", "is_timing_metric",
+    "load_baseline",
+    "load_trajectories", "make_baseline", "read_jsonl", "record",
+    "scalarize", "set_recorder", "set_sink", "span", "span_paths",
+    "step_annotation", "to_chrome_trace", "to_records", "trace_scope",
+    "tree_sq_sum", "write_baseline", "zeros_like_metrics",
 ]

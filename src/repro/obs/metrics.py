@@ -21,6 +21,7 @@ code (benchmark loops, engines) that already holds concrete values.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 from typing import Any, Dict, Iterable, List, Optional, Protocol, runtime_checkable
@@ -95,13 +96,22 @@ class JsonlSink:
         self.close()
 
 
-def read_jsonl(path: str, strict: bool = False) -> List[Dict[str, Any]]:
+class JsonlRecords(List[Dict[str, Any]]):
+    """``read_jsonl`` result: a plain list of records that additionally
+    carries ``n_skipped`` — how many torn/malformed lines were dropped."""
+
+    n_skipped: int = 0
+
+
+def read_jsonl(path: str, strict: bool = False) -> JsonlRecords:
     """Load a JSONL metrics file back into a list of records.
 
     Malformed lines (a run killed mid-write leaves a torn last line) are
-    skipped by default; ``strict=True`` raises on the first bad line.
+    skipped by default — but not silently: the returned list's
+    ``n_skipped`` attribute counts them and a ``logging`` warning names
+    the file.  ``strict=True`` raises on the first bad line instead.
     """
-    out = []
+    out = JsonlRecords()
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -112,6 +122,11 @@ def read_jsonl(path: str, strict: bool = False) -> List[Dict[str, Any]]:
             except json.JSONDecodeError:
                 if strict:
                     raise
+                out.n_skipped += 1
+    if out.n_skipped:
+        logging.getLogger(__name__).warning(
+            "read_jsonl: skipped %d malformed line(s) in %s",
+            out.n_skipped, path)
     return out
 
 

@@ -17,10 +17,15 @@ Two kinds of series, compared differently:
   (consensus error decays below float noise; relative error alone would
   flag garbage bits).
 
-* **Timing** (``step_time_ms``) — wall-clock, never byte-stable, so the
+* **Timing** (``step_time_ms`` and every per-phase ``phase_*_ms`` column
+  the span profiler adds) — wall-clock, never byte-stable, so the
   baseline stores percentiles only and the check is a one-sided band:
   the current median may not exceed ``timing_ratio`` x the baseline median.
-  The default ratio is generous (shared CI runners are noisy); perf PRs
+  Each phase gets its own band, so a regression confined to (say) prefill
+  trips the gate even when the whole-step total hides it.  Phases whose
+  baseline median sits under ``timing_floor_ms`` are skipped — a 20 μs
+  bookkeeping phase doubling is scheduler noise, not a regression.  The
+  default ratio is generous (shared CI runners are noisy); perf PRs
   that want a tight gate re-record on the target hardware and lower it.
 
 Baselines are plain JSON (``make_baseline`` / ``write_baseline`` /
@@ -47,6 +52,15 @@ DEFAULT_GROUP_KEYS = ("exp", "name", "variant", "method", "seed")
 DEFAULT_STEP_KEY = "step"
 DEFAULT_TIMING_KEY = "step_time_ms"
 
+
+def is_timing_metric(name: str,
+                     timing_key: str = DEFAULT_TIMING_KEY) -> bool:
+    """Wall-clock columns: the whole-step total plus the per-phase
+    ``phase_*_ms`` columns the span profiler adds to step records."""
+    return name == timing_key or (
+        name.startswith("phase_") and name.endswith("_ms"))
+
+
 Rows = Union[str, Sequence[Mapping[str, Any]]]
 
 
@@ -57,6 +71,7 @@ class Tolerance:
     atol: float = 1e-6
     max_violation_frac: float = 0.02
     timing_ratio: float = 10.0
+    timing_floor_ms: float = 0.05
 
     def __post_init__(self):
         if self.rtol < 0 or self.atol < 0:
@@ -65,6 +80,8 @@ class Tolerance:
             raise ValueError("max_violation_frac must be in [0, 1]")
         if self.timing_ratio <= 0:
             raise ValueError("timing_ratio must be > 0")
+        if self.timing_floor_ms < 0:
+            raise ValueError("timing_floor_ms must be >= 0")
 
 
 @dataclasses.dataclass
@@ -193,6 +210,11 @@ def compare_timing(group: str, metric: str, base_pcts: Mapping[str, float],
     if base_p50 <= 0.0 or cur_p["n"] == 0:
         return MetricDiff(group, metric, True, "timing",
                           "no timing data; skipped")
+    if base_p50 < tol.timing_floor_ms:
+        return MetricDiff(
+            group, metric, True, "timing",
+            f"baseline p50 {base_p50:.4g}ms under "
+            f"{tol.timing_floor_ms:g}ms floor; skipped")
     ratio = cur_p["p50"] / base_p50
     passed = ratio <= tol.timing_ratio
     detail = (f"p50 {cur_p['p50']:.4g}ms vs baseline {base_p50:.4g}ms "
@@ -207,14 +229,15 @@ def make_baseline(rows: Rows, *, meta: Optional[Mapping[str, Any]] = None,
                   group_keys: Sequence[str] = DEFAULT_GROUP_KEYS,
                   timing_key: str = DEFAULT_TIMING_KEY) -> Dict[str, Any]:
     """Golden baseline document: full series for trajectories, percentiles
-    only for the (never byte-stable) timing metric."""
+    only for the (never byte-stable) timing metrics — ``timing_key`` plus
+    every per-phase ``phase_*_ms`` column."""
     trajs = load_trajectories(rows, group_keys)
     series: Dict[str, Any] = {}
     for label in sorted(trajs):
         metrics = trajs[label]
         entry: Dict[str, Any] = {"metrics": {}, "timing": {}}
         for name in sorted(metrics):
-            if name == timing_key:
+            if is_timing_metric(name, timing_key):
                 entry["timing"][name] = timing_percentiles(metrics[name])
             else:
                 entry["metrics"][name] = [float(x) for x in metrics[name]]

@@ -89,6 +89,16 @@ class StepTimer:
 
     @property
     def items_per_s(self) -> float:
+        """Throughput off the EMA step time — the quotable number.  The
+        instantaneous value jitters with scheduler noise and GC pauses;
+        see ``items_per_s_instant`` for the raw per-step figure."""
+        if not self.items_per_step or self.ema_step_time_ms <= 0:
+            return 0.0
+        return self.items_per_step / (self.ema_step_time_ms * 1e-3)
+
+    @property
+    def items_per_s_instant(self) -> float:
+        """Throughput off this step's wall time alone (noisy)."""
         if not self.items_per_step or self.step_time_ms <= 0:
             return 0.0
         return self.items_per_step / (self.step_time_ms * 1e-3)
@@ -99,4 +109,48 @@ class StepTimer:
                "wall_s": round(self.wall_s, 3)}
         if self.items_per_step:
             out["throughput_items_per_s"] = round(self.items_per_s, 1)
+            out["throughput_items_per_s_instant"] = round(
+                self.items_per_s_instant, 1)
         return out
+
+
+class ProfileWindow:
+    """Programmatic ``jax.profiler`` capture over a step window.
+
+    Drivers call ``maybe_start(step)`` / ``maybe_stop(step)`` around each
+    step; the trace starts at ``start`` and stops after ``stop``
+    (inclusive), landing a TensorBoard/Perfetto-loadable device trace in
+    ``profile_dir``.  Inert when ``profile_dir`` is None.  ``close()``
+    stops a still-open capture (loops shorter than the window).
+    """
+
+    def __init__(self, profile_dir: Optional[str], start: int = 0,
+                 stop: int = 4) -> None:
+        self.profile_dir = profile_dir
+        self.start = start
+        self.stop = stop
+        self._active = False
+
+    def maybe_start(self, step: int) -> None:
+        if (self.profile_dir is None or self._active
+                or step != self.start):
+            return
+        try:
+            jax.profiler.start_trace(self.profile_dir)
+            self._active = True
+        except Exception:                                # pragma: no cover
+            self.profile_dir = None
+
+    def maybe_stop(self, step: int) -> None:
+        if not self._active or step < self.stop:
+            return
+        self.close()
+
+    def close(self) -> None:
+        if not self._active:
+            return
+        self._active = False
+        try:
+            jax.profiler.stop_trace()
+        except Exception:                                # pragma: no cover
+            pass

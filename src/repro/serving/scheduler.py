@@ -32,10 +32,13 @@ neighbors (pinned in tests/test_serving_scheduler.py).
 
 Telemetry (through any ``obs.MetricsSink``): one ``serve.step`` record per
 scheduling round (queue depth, batch occupancy, prefill/decode token
-counts, wall time) and one ``serve.request`` record per completion (TTFT
-in steps and ms, queueing delay, decode tokens/s, token checksum).
-Schemas are pinned in tests/test_serving_telemetry.py and the golden
-serve baseline (docs/serving.md).
+counts, wall time split into ``phase_admission/prefill/decode/telemetry``
+columns that tile ``step_time_ms``) and one ``serve.request`` record per
+completion (TTFT in steps and ms, queueing delay, decode tokens/s, token
+checksum).  Schemas are pinned in tests/test_serving_telemetry.py and the
+golden serve baseline (docs/serving.md).  With an ``obs.SpanRecorder``
+installed the same phases are recorded as nested host spans
+(``serve.step/serve.decode`` ...) for ``repro.obs.report`` / Perfetto.
 """
 from __future__ import annotations
 
@@ -57,10 +60,17 @@ from repro.serving.kvpool import KVSlotPool
 # lifecycle states
 QUEUED, PREFILL, DECODE, DONE = "QUEUED", "PREFILL", "DECODE", "DONE"
 
-#: pinned key set of the per-round telemetry record
+#: pinned key set of the per-round telemetry record.  The ``phase_*_ms``
+#: columns tile the round exactly: admission (incl. batch-list builds and
+#: audio encode) -> prefill -> decode, plus the *previous* round's
+#: record-build/sink-flush wall as ``phase_telemetry_ms`` — so
+#: ``step_time_ms == sum(phase_*_ms)`` up to rounding, and
+#: ``repro.obs.report`` shows ~100% phase coverage.
 STEP_RECORD_KEYS = ("name", "step", "queue_depth", "occupancy", "free_slots",
                     "n_prefill", "n_decode", "prefill_tokens",
-                    "decode_tokens", "admitted", "completed", "step_time_ms")
+                    "decode_tokens", "admitted", "completed", "step_time_ms",
+                    "phase_admission_ms", "phase_prefill_ms",
+                    "phase_decode_ms", "phase_telemetry_ms")
 
 #: pinned key set of the per-completion telemetry record
 REQUEST_RECORD_KEYS = ("name", "step", "prompt_len", "new_tokens",
@@ -187,6 +197,9 @@ class Scheduler:
         # cumulative wall split, for Engine.last_stats
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        # previous round's record-build + sink-flush wall (ms); reported
+        # as this round's phase_telemetry_ms so phases tile step_time_ms
+        self._flush_ms = 0.0
         self._decode = _jitted_decode(cfg, self.sched.window_override)
         self._prefill = _jitted_prefill(cfg, self.sched.window_override)
 
@@ -244,108 +257,134 @@ class Scheduler:
     # ---------------------------------------------------------------- step
 
     def step(self) -> Dict[str, Any]:
-        """One scheduling round; returns (and sinks) the serve.step record."""
+        """One scheduling round; returns (and sinks) the serve.step record.
+
+        The ``phase_*_ms`` columns tile the measured window end-to-end
+        (see STEP_RECORD_KEYS): admission covers everything from round
+        start to the first prefill dispatch (FIFO admission, audio
+        encode, batch-list builds), then prefill, then decode (which
+        blocks on the sampled tokens, so it times the work); the
+        record-build + sink-flush tail of round *t* is carried into
+        round *t+1* as its ``phase_telemetry_ms`` and folded into that
+        round's ``step_time_ms``, keeping phases summing to the total.
+        """
         t_start = time.perf_counter()
-        budget = self.sched.token_budget
-        decoding = sorted((r for r in self.active.values()
-                           if r.state == DECODE), key=lambda r: r.rid)
-        budget -= len(decoding)            # running decodes are pre-booked
+        with obs.span("serve.step", step=self.step_idx):
+            budget = self.sched.token_budget
+            with obs.span("serve.admission"):
+                decoding = sorted((r for r in self.active.values()
+                                   if r.state == DECODE),
+                                  key=lambda r: r.rid)
+                budget -= len(decoding)    # running decodes are pre-booked
 
-        # ---- admission: FIFO while a slot is free and budget remains
-        admitted = 0
-        while self.queue and self.pool.n_free > 0 and budget > 0:
-            req = self.queue.popleft()
-            req.slot = self.pool.alloc()
-            req.state = PREFILL
-            req.admit_step = self.step_idx
-            self.active[req.rid] = req
-            admitted += 1
-            if self.cfg.family == "audio":
-                slot_cache = self.pool.read_slot(req.slot)
-                assert req.frames is not None, "audio request without frames"
-                slot_cache = D.encode_for_decode(
-                    self.params, slot_cache,
-                    jnp.asarray(req.frames)[None], self.cfg)
-                self.pool.write_slot(req.slot, slot_cache)
+                # ---- admission: FIFO while a slot is free and budget left
+                admitted = 0
+                while self.queue and self.pool.n_free > 0 and budget > 0:
+                    req = self.queue.popleft()
+                    req.slot = self.pool.alloc()
+                    req.state = PREFILL
+                    req.admit_step = self.step_idx
+                    self.active[req.rid] = req
+                    admitted += 1
+                    if self.cfg.family == "audio":
+                        slot_cache = self.pool.read_slot(req.slot)
+                        assert req.frames is not None, \
+                            "audio request without frames"
+                        slot_cache = D.encode_for_decode(
+                            self.params, slot_cache,
+                            jnp.asarray(req.frames)[None], self.cfg)
+                        self.pool.write_slot(req.slot, slot_cache)
 
-        # ---- chunked prefill, oldest request first
-        completed = 0
-        prefill_tokens = 0
-        prefilling = sorted((r for r in self.active.values()
-                             if r.state == PREFILL), key=lambda r: r.rid)
-        t0 = time.perf_counter()
-        for req in prefilling:
-            if budget <= 0:
-                break
-            chunk = min(self.sched.prefill_chunk,
-                        req.prompt_len - req.n_prefilled, budget)
-            if chunk <= 0:
-                continue
-            toks = jnp.asarray(
-                req.prompt[req.n_prefilled:req.n_prefilled + chunk][None])
-            first_tok, slot_cache = self._prefill(
-                self.params, self.pool.read_slot(req.slot), toks,
-                jnp.int32(req.n_prefilled))
-            self.pool.write_slot(req.slot, slot_cache)
-            req.n_prefilled += chunk
-            self.pool.positions[req.slot] += chunk
-            budget -= chunk
-            prefill_tokens += chunk
-            if req.n_prefilled == req.prompt_len:
-                tok = int(first_tok[0])
-                req.tokens.append(tok)
-                req.last_token = tok
-                req.first_token_step = self.step_idx
-                req.first_token_t = time.perf_counter()
-                req.state = DECODE
-                if len(req.tokens) >= req.max_new:
-                    self._finish(req)
-                    completed += 1
-        t1 = time.perf_counter()
-        self.prefill_s += t1 - t0
+                completed = 0
+                prefill_tokens = 0
+                prefilling = sorted((r for r in self.active.values()
+                                     if r.state == PREFILL),
+                                    key=lambda r: r.rid)
+            t0 = time.perf_counter()
 
-        # ---- one batched decode over every running sequence
-        if decoding:
-            n = self.pool.max_slots
-            tokens = np.zeros((n, 1), np.int32)
-            pos = np.zeros(n, np.int32)
-            mask = np.zeros(n, bool)
-            for r in decoding:
-                tokens[r.slot, 0] = r.last_token
-                pos[r.slot] = self.pool.positions[r.slot]
-                mask[r.slot] = True
-            next_tok, arena = self._decode(self.params, self.pool.arena,
-                                           jnp.asarray(tokens),
-                                           jnp.asarray(pos),
-                                           jnp.asarray(mask))
-            self.pool.arena = arena
-            next_tok = np.asarray(jax.block_until_ready(next_tok))
-            for r in decoding:
-                tok = int(next_tok[r.slot])
-                r.tokens.append(tok)
-                r.last_token = tok
-                self.pool.positions[r.slot] += 1
-                if len(r.tokens) >= r.max_new:
-                    self._finish(r)
-                    completed += 1
-        self.decode_s += time.perf_counter() - t1
+            # ---- chunked prefill, oldest request first
+            with obs.span("serve.prefill"):
+                for req in prefilling:
+                    if budget <= 0:
+                        break
+                    chunk = min(self.sched.prefill_chunk,
+                                req.prompt_len - req.n_prefilled, budget)
+                    if chunk <= 0:
+                        continue
+                    toks = jnp.asarray(
+                        req.prompt[req.n_prefilled:
+                                   req.n_prefilled + chunk][None])
+                    first_tok, slot_cache = self._prefill(
+                        self.params, self.pool.read_slot(req.slot), toks,
+                        jnp.int32(req.n_prefilled))
+                    self.pool.write_slot(req.slot, slot_cache)
+                    req.n_prefilled += chunk
+                    self.pool.positions[req.slot] += chunk
+                    budget -= chunk
+                    prefill_tokens += chunk
+                    if req.n_prefilled == req.prompt_len:
+                        tok = int(first_tok[0])
+                        req.tokens.append(tok)
+                        req.last_token = tok
+                        req.first_token_step = self.step_idx
+                        req.first_token_t = time.perf_counter()
+                        req.state = DECODE
+                        if len(req.tokens) >= req.max_new:
+                            self._finish(req)
+                            completed += 1
+            t1 = time.perf_counter()
+            self.prefill_s += t1 - t0
 
-        rec = {
-            "name": "serve.step", "step": self.step_idx,
-            "queue_depth": len(self.queue),
-            "occupancy": self.pool.n_used,
-            "free_slots": self.pool.n_free,
-            "n_prefill": sum(r.state == PREFILL
-                             for r in self.active.values()),
-            "n_decode": len(decoding),
-            "prefill_tokens": prefill_tokens,
-            "decode_tokens": len(decoding),
-            "admitted": admitted,
-            "completed": completed,
-            "step_time_ms": round((time.perf_counter() - t_start) * 1e3, 3),
-        }
-        if self.sink is not None:
-            self.sink.write(rec)
+            # ---- one batched decode over every running sequence
+            with obs.span("serve.decode"):
+                if decoding:
+                    n = self.pool.max_slots
+                    tokens = np.zeros((n, 1), np.int32)
+                    pos = np.zeros(n, np.int32)
+                    mask = np.zeros(n, bool)
+                    for r in decoding:
+                        tokens[r.slot, 0] = r.last_token
+                        pos[r.slot] = self.pool.positions[r.slot]
+                        mask[r.slot] = True
+                    next_tok, arena = self._decode(
+                        self.params, self.pool.arena, jnp.asarray(tokens),
+                        jnp.asarray(pos), jnp.asarray(mask))
+                    self.pool.arena = arena
+                    next_tok = np.asarray(jax.block_until_ready(next_tok))
+                    for r in decoding:
+                        tok = int(next_tok[r.slot])
+                        r.tokens.append(tok)
+                        r.last_token = tok
+                        self.pool.positions[r.slot] += 1
+                        if len(r.tokens) >= r.max_new:
+                            self._finish(r)
+                            completed += 1
+            t_d = time.perf_counter()
+            self.decode_s += t_d - t1
+
+            with obs.span("serve.telemetry"):
+                rec = {
+                    "name": "serve.step", "step": self.step_idx,
+                    "queue_depth": len(self.queue),
+                    "occupancy": self.pool.n_used,
+                    "free_slots": self.pool.n_free,
+                    "n_prefill": sum(r.state == PREFILL
+                                     for r in self.active.values()),
+                    "n_decode": len(decoding),
+                    "prefill_tokens": prefill_tokens,
+                    "decode_tokens": len(decoding),
+                    "admitted": admitted,
+                    "completed": completed,
+                    "step_time_ms": round(
+                        (t_d - t_start) * 1e3 + self._flush_ms, 3),
+                    "phase_admission_ms": round((t0 - t_start) * 1e3, 3),
+                    "phase_prefill_ms": round((t1 - t0) * 1e3, 3),
+                    "phase_decode_ms": round((t_d - t1) * 1e3, 3),
+                    "phase_telemetry_ms": self._flush_ms,
+                }
+                if self.sink is not None:
+                    self.sink.write(rec)
+            self._flush_ms = round((time.perf_counter() - t_d) * 1e3, 3)
         self.step_idx += 1
         return rec
 

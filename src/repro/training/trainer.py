@@ -36,6 +36,9 @@ class Trainer:
     metrics_file: Optional[str] = None
     sink: Optional[obs.MetricsSink] = None
     tokens_per_step: float = 0.0   # for throughput_items_per_s in the sink
+    profile_dir: Optional[str] = None   # jax.profiler capture target
+    profile_start: int = 0              # capture window: steps
+    profile_stop: int = 4               # [profile_start, profile_stop]
 
     def __post_init__(self):
         self.step_fn = jax.jit(
@@ -49,29 +52,51 @@ class Trainer:
     def run(self, state: TrainState, data: Iterator[Dict[str, np.ndarray]],
             steps: int) -> TrainState:
         timer = obs.StepTimer(items_per_step=self.tokens_per_step)
-        for i in range(steps):
-            batch = next(data)
-            with obs.step_annotation("train", step=i):
-                state, metrics = self.step_fn(state, batch)
-            if self.sink is not None:
-                # block so the timer measures the step, not the dispatch
-                jax.block_until_ready(metrics)
-            timer.tick()
-            scalars = {k: float(np.asarray(v))
-                       for k, v in metrics.items()
-                       if np.asarray(v).ndim == 0}
-            if self.sink is not None:
-                rec = dict(step=i, **scalars, **timer.counters())
-                self.sink.write(rec)
-            if i % self.log_every == 0 or i == steps - 1:
-                m = dict(scalars)
-                m.update(step=i, wall=round(timer.wall_s, 2))
-                self._history.append(m)
-                print(json.dumps(m), flush=True)
-            if self.ckpt_every and (i + 1) % self.ckpt_every == 0:
-                with obs.annotate("checkpoint_save"):
-                    ckpt.save(os.path.join(self.ckpt_dir, f"step{i+1}.npz"),
-                              state.params, {"step": i + 1})
+        prof = obs.ProfileWindow(self.profile_dir, self.profile_start,
+                                 self.profile_stop)
+        try:
+            for i in range(steps):
+                prof.maybe_start(i)
+                t_step = time.perf_counter()
+                with obs.span("train.step", step=i):
+                    with obs.span("train.data"):
+                        batch = next(data)
+                    t0 = time.perf_counter()
+                    with obs.step_annotation("train", step=i), \
+                            obs.span("train.device_step"):
+                        state, metrics = self.step_fn(state, batch)
+                        if (self.sink is not None
+                                or obs.get_recorder() is not None):
+                            # block so the timer (and the span) measures
+                            # the step, not the dispatch
+                            jax.block_until_ready(metrics)
+                    t1 = time.perf_counter()
+                    timer.tick()
+                    with obs.span("train.metrics"):
+                        scalars = {k: float(np.asarray(v))
+                                   for k, v in metrics.items()
+                                   if np.asarray(v).ndim == 0}
+                        t2 = time.perf_counter()
+                        if self.sink is not None:
+                            rec = dict(
+                                step=i, **scalars, **timer.counters(),
+                                phase_data_ms=round((t0 - t_step) * 1e3, 3),
+                                phase_step_ms=round((t1 - t0) * 1e3, 3),
+                                phase_metrics_ms=round((t2 - t1) * 1e3, 3))
+                            self.sink.write(rec)
+                if i % self.log_every == 0 or i == steps - 1:
+                    m = dict(scalars)
+                    m.update(step=i, wall=round(timer.wall_s, 2))
+                    self._history.append(m)
+                    print(json.dumps(m), flush=True)
+                if self.ckpt_every and (i + 1) % self.ckpt_every == 0:
+                    with obs.annotate("checkpoint_save"):
+                        ckpt.save(
+                            os.path.join(self.ckpt_dir, f"step{i+1}.npz"),
+                            state.params, {"step": i + 1})
+                prof.maybe_stop(i)
+        finally:
+            prof.close()
         if self.metrics_file:
             os.makedirs(os.path.dirname(self.metrics_file) or ".",
                         exist_ok=True)

@@ -70,19 +70,36 @@ def test_jsonl_sink_reopen_cycles(tmp_path):
     assert [r["step"] for r in M.read_jsonl(path)] == [99]
 
 
-def test_read_jsonl_skips_malformed_lines(tmp_path):
+def test_read_jsonl_skips_malformed_lines(tmp_path, caplog):
     """A run killed mid-write leaves a torn line; read-back skips it (and
-    any other garbage) by default, raises under strict=True."""
+    any other garbage) by default — counted on the result and warned about,
+    never silently — and raises under strict=True."""
+    import logging
     path = str(tmp_path / "torn.jsonl")
     with open(path, "w") as f:
         f.write('{"step": 0, "loss": 1.0}\n')
         f.write('not json at all\n')
         f.write('{"step": 1, "loss": 0.5}\n')
         f.write('{"step": 2, "los')               # torn mid-record
-    rows = M.read_jsonl(path)
+    with caplog.at_level(logging.WARNING, logger="repro.obs.metrics"):
+        rows = M.read_jsonl(path)
     assert [r["step"] for r in rows] == [0, 1]
+    assert rows.n_skipped == 2
+    assert any("skipped 2 malformed line(s)" in r.message and path in r.message
+               for r in caplog.records)
     with pytest.raises(json.JSONDecodeError):
         M.read_jsonl(path, strict=True)
+
+
+def test_read_jsonl_clean_file_reports_zero_skipped(tmp_path, caplog):
+    import logging
+    path = str(tmp_path / "clean.jsonl")
+    with open(path, "w") as f:
+        f.write('{"step": 0}\n\n')                # blank line is not "torn"
+    with caplog.at_level(logging.WARNING, logger="repro.obs.metrics"):
+        rows = M.read_jsonl(path)
+    assert rows == [{"step": 0}] and rows.n_skipped == 0
+    assert not caplog.records
 
 
 def test_memory_sink_and_default_record():
@@ -110,11 +127,35 @@ def test_step_timer_counters():
     t = OT.StepTimer(items_per_step=10.0)
     assert t.tick() >= 0.0
     c1 = t.counters()
-    assert set(c1) >= {"step_time_ms", "wall_s", "throughput_items_per_s"}
+    assert set(c1) == {"step_time_ms", "wall_s", "throughput_items_per_s",
+                       "throughput_items_per_s_instant"}
     assert c1["step_time_ms"] >= 0.0
     t2 = OT.StepTimer()
     t2.tick()
     assert set(t2.counters()) == {"step_time_ms", "wall_s"}
+
+
+def test_step_timer_throughput_quotes_ema():
+    """The headline items/s comes off the EMA step time (stable under
+    one-off stalls); the raw per-step figure stays available as
+    ``items_per_s_instant``."""
+    t = OT.StepTimer(items_per_step=100.0, ema=0.9)
+    t.tick()
+    # inject known step times instead of sleeping
+    t.step_time_ms, t.ema_step_time_ms = 50.0, 10.0
+    assert t.items_per_s == pytest.approx(100.0 / (10.0 * 1e-3))
+    assert t.items_per_s_instant == pytest.approx(100.0 / (50.0 * 1e-3))
+    c = t.counters()
+    assert c["throughput_items_per_s"] == pytest.approx(10000.0, abs=0.1)
+    assert c["throughput_items_per_s_instant"] == pytest.approx(2000.0,
+                                                                abs=0.1)
+    # first tick seeds the EMA with the first measurement
+    t3 = OT.StepTimer(items_per_step=1.0)
+    first = t3.tick()
+    assert t3.ema_step_time_ms == pytest.approx(first)
+    # zero-state edge: no division by zero before any tick
+    t4 = OT.StepTimer(items_per_step=1.0)
+    assert t4.items_per_s == 0.0 and t4.items_per_s_instant == 0.0
 
 
 # --------------------------------------------------- jit-safe computations

@@ -64,17 +64,23 @@ def test_generate_sink_record_schema(engine_and_sink):
 
 def test_step_record_schema(engine_and_sink):
     """Every scheduling round writes one serve.step record with the pinned
-    queue/occupancy/throughput counters."""
+    queue/occupancy/throughput counters and the per-phase wall split."""
     eng, sink = engine_and_sink
     n_before = len(sink.records)
     eng.generate(np.array([[3, 1, 4], [1, 5, 9]], np.int32), n_new=3)
     steps = _named(sink.records[n_before:], "serve.step")
     assert len(steps) >= 2
+    n_counters = STEP_RECORD_KEYS.index("step_time_ms")
+    timing_keys = STEP_RECORD_KEYS[n_counters:]
+    assert timing_keys == ("step_time_ms", "phase_admission_ms",
+                           "phase_prefill_ms", "phase_decode_ms",
+                           "phase_telemetry_ms")
     for rec in steps:
         assert tuple(rec) == STEP_RECORD_KEYS
-        for k in STEP_RECORD_KEYS[1:-1]:
+        for k in STEP_RECORD_KEYS[1:n_counters]:
             assert isinstance(rec[k], int) and rec[k] >= 0, k
-        assert isinstance(rec["step_time_ms"], float)
+        for k in timing_keys:
+            assert isinstance(rec[k], float) and rec[k] >= 0.0, k
         assert rec["occupancy"] + rec["free_slots"] == eng.max_slots
     # both prompts fit the pool: admitted together, decoded as a batch
     assert max(r["occupancy"] for r in steps) == 2
@@ -83,6 +89,25 @@ def test_step_record_schema(engine_and_sink):
     # step counter is monotone across generate() calls (shared scheduler)
     assert [r["step"] for r in steps] == list(
         range(steps[0]["step"], steps[0]["step"] + len(steps)))
+
+
+def test_step_phases_tile_the_step(engine_and_sink):
+    """The four phase columns account for (essentially all of) each round's
+    step_time_ms — the acceptance bar is >= 90% per step.  By construction
+    admission+prefill+decode tile t_start..t_d and phase_telemetry_ms
+    carries the previous round's record flush, so coverage only loses
+    rounding (3 decimal places per column)."""
+    eng, sink = engine_and_sink
+    n_before = len(sink.records)
+    eng.generate(np.array([[6, 2, 8], [3, 1, 7]], np.int32), n_new=4)
+    steps = _named(sink.records[n_before:], "serve.step")
+    assert len(steps) >= 2
+    phase_keys = [k for k in STEP_RECORD_KEYS if k.startswith("phase_")]
+    for rec in steps:
+        covered = sum(rec[k] for k in phase_keys)
+        assert covered >= 0.9 * rec["step_time_ms"] - 0.01, rec
+        # ...and phases never exceed the total by more than rounding slop
+        assert covered <= rec["step_time_ms"] + 0.01, rec
 
 
 def test_request_record_schema(engine_and_sink):
